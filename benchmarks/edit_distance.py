@@ -1,0 +1,59 @@
+"""Paper Fig 4-13 / §4.10.4: edit distance calculation vs the Edlib
+baseline (Myers' bitvector algorithm), across lengths and similarities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.edit_distance import genasm_distance_batch
+from repro.core.genasm import GenASMConfig
+from repro.core.myers import myers_distance
+from repro.genomics import simulate
+
+from .common import row, timeit
+
+
+def run(length: int = 1000, similarity: float = 0.95, batch: int = 8):
+    rng = np.random.default_rng(7)
+    err = 1 - similarity
+    prof = simulate.ErrorProfile("x", err, 0.4, 0.3, 0.3)
+    p_cap = length + 64
+    a = np.full((batch, p_cap), 4, np.int8)
+    b = np.full((batch, p_cap + 128), 4, np.int8)
+    a_lens = np.zeros(batch, np.int32)
+    b_lens = np.zeros(batch, np.int32)
+    for i in range(batch):
+        s = rng.integers(0, 4, size=length).astype(np.int8)
+        t = simulate.mutate(s, prof, rng)
+        a[i, : len(s)] = s
+        b[i, : len(t)] = t[: b.shape[1]]
+        a_lens[i], b_lens[i] = len(s), min(len(t), b.shape[1])
+
+    cfg = GenASMConfig(w=64, o=24, k=24)
+    g = jax.jit(lambda aa, bb, al, bl: genasm_distance_batch(bb, aa, bl, al)
+                if False else genasm_distance_batch(aa, bb, al, bl, cfg=cfg))
+    us = timeit(g, jnp.asarray(a), jnp.asarray(b), jnp.asarray(a_lens),
+                jnp.asarray(b_lens))
+    d = np.asarray(g(jnp.asarray(a), jnp.asarray(b), jnp.asarray(a_lens),
+                     jnp.asarray(b_lens)))
+    row(f"edit_distance_genasm_L{length}_s{int(similarity * 100)}", us / batch,
+        f"pairs_per_s={batch / (us / 1e6):.1f};mean_dist={d.mean():.1f}")
+
+    m_bits = ((length + 63) // 64) * 64
+    my = jax.jit(jax.vmap(lambda bb, aa, al: myers_distance(
+        bb, aa[:m_bits], al, m_bits=m_bits, mode="semiglobal")))
+    us_m = timeit(my, jnp.asarray(b), jnp.asarray(a), jnp.asarray(a_lens))
+    dm = np.asarray(my(jnp.asarray(b), jnp.asarray(a), jnp.asarray(a_lens)))
+    row(f"edit_distance_myers_L{length}_s{int(similarity * 100)}", us_m / batch,
+        f"pairs_per_s={batch / (us_m / 1e6):.1f};mean_dist={dm.mean():.1f}")
+
+
+def main():
+    run(1000, 0.95)
+    run(1000, 0.80)
+    run(5000, 0.95, batch=4)
+
+
+if __name__ == "__main__":
+    main()

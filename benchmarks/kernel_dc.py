@@ -1,0 +1,73 @@
+"""BitMAc-style kernel analysis (paper Ch. 5): GenASM-DC Pallas kernel
+throughput + arithmetic-intensity accounting (bytes/FLOP balance that
+motivated the near-memory design)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import row, timeit
+
+
+def run(batch: int = 256, w: int = 64, k: int = 24):
+    rng = np.random.default_rng(13)
+    texts = rng.integers(0, 4, size=(batch, w)).astype(np.int8)
+    pats = rng.integers(0, 4, size=(batch, w)).astype(np.int8)
+
+    kern = jax.jit(lambda t, p: ops.window_dc(t, p, w=w, k=k, block_bt=64))
+    us_k = timeit(kern, jnp.asarray(texts), jnp.asarray(pats))
+    pure = jax.jit(lambda t, p: ref.window_dc_batch(t, p, w=w, k=k))
+    us_r = timeit(pure, jnp.asarray(texts), jnp.asarray(pats))
+
+    # per-window work: W text steps × (k+1) rows × ~6 word-ops × nw words
+    nw = w // 32
+    ops_per_window = w * (k + 1) * 6 * nw
+    tb_bytes = w * (k + 1) * 3 * nw * 4  # TB-SRAM stream per window (v1)
+    tb_bytes_v2 = (w + 1) * (k + 1) * nw * 4  # R-only store (§Perf #8)
+    row("kernel_dc_pallas_interpret", us_k / batch,
+        f"windows_per_s={batch / (us_k / 1e6):.0f};word_ops_per_window={ops_per_window};tb_bytes={tb_bytes};ai={ops_per_window / tb_bytes:.2f}")
+    row("kernel_dc_pure_jax", us_r / batch,
+        f"windows_per_s={batch / (us_r / 1e6):.0f}")
+
+    kern2 = jax.jit(lambda t, p: ops.window_dc_v2(t, p, w=w, k=k, block_bt=64))
+    us_k2 = timeit(kern2, jnp.asarray(texts), jnp.asarray(pats))
+    row("kernel_dc_v2_pallas_interpret", us_k2 / batch,
+        f"windows_per_s={batch / (us_k2 / 1e6):.0f};tb_bytes={tb_bytes_v2};ai={ops_per_window / tb_bytes_v2:.2f}")
+
+
+def run_bitalign_kernel(batch: int = 64, n: int = 128, m_bits: int = 64,
+                        k: int = 12):
+    from repro.core.segram import graph
+    from repro.genomics import simulate
+
+    rng = np.random.default_rng(17)
+    bases = np.zeros((batch, n), np.int8)
+    succ = np.zeros((batch, n), np.uint32)
+    pats = np.full((batch, m_bits), 4, np.int8)
+    plens = np.full((batch,), m_bits - 16, np.int32)
+    refseq = rng.integers(0, 4, size=n - 12).astype(np.int8)
+    g = graph.build_graph(refseq, simulate.simulate_variants(
+        refseq, n_snp=4, n_ins=2, n_del=2, seed=1))
+    b_, s_ = graph.extract_subgraph(g, 0, n)
+    bases[:], succ[:] = b_, s_
+    for i in range(batch):
+        st = int(rng.integers(0, 40))
+        pats[i, : m_bits - 16] = refseq[st: st + m_bits - 16]
+    f = jax.jit(lambda b, s, p, l: ops.bitalign_dc(b, s, p, l, m_bits=m_bits,
+                                                   k=k, block_bt=32))
+    us = timeit(f, jnp.asarray(bases), jnp.asarray(succ), jnp.asarray(pats),
+                jnp.asarray(plens))
+    row("kernel_bitalign_pallas_interpret", us / batch,
+        f"aligns_per_s={batch / (us / 1e6):.0f};nodes={n}")
+
+
+def main():
+    run()
+    run_bitalign_kernel()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Roofline table from dryrun_results.json (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import row
+
+RESULTS = Path(__file__).resolve().parents[1] / "dryrun_results.json"
+
+
+def main():
+    if not RESULTS.exists():
+        row("roofline", 0.0, "dryrun_results.json missing — run repro.launch.dryrun")
+        return
+    res = json.loads(RESULTS.read_text())
+    for key, rec in sorted(res.items()):
+        if "error" in rec:
+            row(f"roofline_{key.replace('|', '_')}", 0.0, f"ERROR:{rec['error'][:60]}")
+            continue
+        if "analytic" not in rec:
+            continue
+        a = rec["analytic"]
+        row(
+            f"roofline_{key.replace('|', '_')}",
+            a["roofline_s"] * 1e6,
+            (
+                f"bottleneck={a['bottleneck']};compute_s={a['compute_s']:.2e};"
+                f"memory_s={a['memory_s']:.2e};collective_s={a['collective_s']:.2e};"
+                f"mfu_bound={a['mfu_bound']:.2f};"
+                f"temp_gb={rec['memory']['temp_bytes'] / 1e9:.1f}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  read_alignment   — Figs 4-8/4-9 (GenASM vs DP alignment kernels)
+  prealign_filter  — §4.10.3 (GenASM-DC filter vs q-gram approx, accuracy)
+  edit_distance    — Fig 4-13 (GenASM vs Myers/Edlib)
+  bitalign         — Fig 6-15 (BitAlign vs graph-DP / PaSGAL stand-in)
+  segram_e2e       — Figs 6-11..6-14 (SeGraM end-to-end mapping)
+  kernel_dc        — Ch. 5 BitMAc kernel analysis
+  roofline         — §Roofline table from the multi-pod dry-run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bitalign, edit_distance, kernel_dc, prealign_filter,
+                   read_alignment, roofline, segram_e2e)
+
+    mods = {
+        "read_alignment": read_alignment,
+        "prealign_filter": prealign_filter,
+        "edit_distance": edit_distance,
+        "bitalign": bitalign,
+        "segram_e2e": segram_e2e,
+        "kernel_dc": kernel_dc,
+        "roofline": roofline,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness running
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

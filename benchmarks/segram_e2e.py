@@ -1,0 +1,49 @@
+"""Paper Figs 6-11..6-14: SeGraM end-to-end sequence-to-graph mapping
+throughput (reads/s), short and long-ish reads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.segram import graph, segram
+from repro.genomics import encode, simulate
+
+from .common import row, timeit
+
+
+def run(kind: str = "short", batch: int = 16):
+    ref_len = 8000
+    ref = simulate.random_reference(ref_len, seed=21)
+    variants = simulate.simulate_variants(ref, n_snp=24, n_ins=8, n_del=8, seed=4)
+    g = graph.build_graph(ref, variants)
+    idx = segram.preprocess(ref, g, w=8, k=12)
+    if kind == "short":
+        read_len, m_bits, win = 100, 128, 192
+        prof = simulate.ILLUMINA
+    else:
+        read_len, m_bits, win = 400, 448, 576
+        prof = simulate.PACBIO_CLR
+    rs = simulate.simulate_reads(ref, n_reads=batch, read_len=read_len,
+                                 profile=prof, seed=5)
+    reads, lens = encode.batch_reads(rs.reads, m_bits)
+    k = max(24, int(read_len * (prof.error_rate + 0.05)))
+    k = min(k, 64)
+
+    f = jax.jit(lambda r, l: segram.map_batch(
+        idx, r, l, m_bits=m_bits, k=k, win_len=win, minimizer_w=8,
+        minimizer_k=12))
+    us = timeit(f, jnp.asarray(reads), jnp.asarray(lens))
+    out = f(jnp.asarray(reads), jnp.asarray(lens))
+    mapped = int(np.sum(~np.asarray(out["failed"])))
+    row(f"segram_e2e_{kind}", us / batch,
+        f"reads_per_s={batch / (us / 1e6):.1f};mapped={mapped}/{batch}")
+
+
+def main():
+    run("short")
+    run("long", batch=8)
+
+
+if __name__ == "__main__":
+    main()

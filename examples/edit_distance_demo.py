@@ -1,0 +1,29 @@
+"""Use case 3: edit distance of two long sequences, GenASM vs Myers(Edlib).
+
+    PYTHONPATH=src python examples/edit_distance_demo.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.edit_distance import genasm_distance
+from repro.core.myers import myers_distance
+from repro.genomics import simulate
+
+rng = np.random.default_rng(0)
+a = simulate.random_reference(2000, seed=1)          # text
+b = simulate.mutate(a, simulate.PROFILES["pacbio"], rng)  # pattern (query)
+
+p_cap = 2112
+pbuf = np.full((p_cap,), 4, np.int8); pbuf[: len(b)] = b
+tbuf = np.full((p_cap + 192,), 4, np.int8); tbuf[: len(a)] = a
+
+d = int(genasm_distance(jnp.asarray(pbuf), jnp.asarray(tbuf),
+                        jnp.int32(len(b)), jnp.int32(len(a)), p_cap=p_cap))
+m_bits = ((len(b) + 63) // 64) * 64
+mbuf = np.full((m_bits,), 4, np.int8); mbuf[: len(b)] = b
+dm = int(myers_distance(jnp.asarray(tbuf), jnp.asarray(mbuf),
+                        jnp.int32(len(b)), m_bits=m_bits, mode="semiglobal"))
+print(f"sequence lengths: {len(a)} (text) vs {len(b)} (query)")
+print(f"GenASM windowed distance: {d}")
+print(f"Myers (Edlib) distance:   {dm}")
+assert dm <= d <= dm + max(5, dm // 20), (d, dm)  # windowed ≈ exact

@@ -1,0 +1,29 @@
+"""Quickstart: align one read against a reference with GenASM.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.genasm import GenASMConfig, align
+from repro.genomics.encode import encode
+from repro.genomics.io import cigar_string
+
+REF = "ACGTACGGATTACAGGCATCGTACGATCGTAGCTAGCTTAGGCATCATACGGATTACATTCCGGAA"
+READ = "ACGGATTACAGGCTTCGTACGATCGAGCTAGCTTAGGCAT"  # 1 subst + 1 deletion
+
+ref = encode(REF)
+read = encode(READ)
+offset = 4  # candidate location (in production found by minimizer seeding)
+
+p_cap = 64
+text = np.full((p_cap + 64,), 4, np.int8)
+text[: len(ref) - offset] = ref[offset:]
+pat = np.full((p_cap,), 4, np.int8)
+pat[: len(read)] = read
+
+res = align(jnp.asarray(text), jnp.asarray(pat), jnp.int32(len(read)),
+            jnp.int32(len(ref) - offset), cfg=GenASMConfig(), p_cap=p_cap)
+print("edit distance:", int(res.distance))
+print("CIGAR:", cigar_string(np.asarray(res.ops), int(res.n_ops)))
+assert int(res.distance) == 2

@@ -1,0 +1,9 @@
+"""End-to-end driver: batched read-mapping service (seed → filter → align),
+with work-queue fault tolerance and PAF output — the paper's workload.
+
+    PYTHONPATH=src python examples/read_mapping.py
+"""
+from repro.launch.serve_genomics import main
+
+main(["--ref-len", "20000", "--reads", "48", "--read-len", "150",
+      "--batch", "16", "--out", "/tmp/mappings.paf"])

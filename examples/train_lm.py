@@ -1,0 +1,15 @@
+"""Train a ~100M-parameter LM for a few hundred steps on CPU (the
+end-to-end training driver over the assigned-architecture substrate).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+steps = "200"
+if "--steps" in sys.argv:
+    steps = sys.argv[sys.argv.index("--steps") + 1]
+main(["--arch", "yi-6b", "--smoke", "--d-model", "1024", "--layers", "6",
+      "--steps", steps, "--seq", "128", "--batch", "4",
+      "--ckpt-dir", "/tmp/repro_ckpt"])

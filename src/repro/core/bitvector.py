@@ -1,0 +1,84 @@
+"""Multi-word bitvector algebra for the Bitap family (GenASM-DC/TB, Myers).
+
+Conventions (see DESIGN.md §7):
+  * A bitvector of ``n_bits`` is stored as ``uint32[nw]`` little-endian words:
+    ``w[0]`` holds bits 0..31, global bit ``g`` lives at word ``g // 32``,
+    offset ``g % 32``.  ``n_bits`` must be a multiple of 32.
+  * Pattern character ``j`` maps to bit ``n_bits - 1 - j`` (MSB = pattern[0]),
+    exactly as in the paper's Figure 4-2.
+  * Base alphabet: A=0 C=1 G=2 T=3.  Id 4 is dual-purpose: as a *pattern*
+    char it is the WILDCARD (matches every text char); as a *text* char it is
+    the SENTINEL (matched only by wildcards).  A single rule implements both:
+    ``match(p, c) = (p == c) | (p == 4)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WORD_BITS = 32
+NUM_CHARS = 5  # A, C, G, T, sentinel/wildcard
+WILDCARD = 4
+SENTINEL = 4
+
+
+def n_words(n_bits: int) -> int:
+    if n_bits % WORD_BITS != 0:
+        raise ValueError(f"n_bits must be a multiple of {WORD_BITS}, got {n_bits}")
+    return n_bits // WORD_BITS
+
+
+def ones(shape) -> jnp.ndarray:
+    """All-ones bitvector(s); trailing axis is the word axis."""
+    return jnp.full(shape, 0xFFFFFFFF, dtype=jnp.uint32)
+
+
+def shl1(x: jnp.ndarray) -> jnp.ndarray:
+    """Shift the whole multi-word bitvector left by one, shifting in a 0.
+
+    ``x``: ``[..., nw] uint32``.  Cross-word carries propagate from word
+    ``j-1``'s MSB into word ``j``'s LSB.
+    """
+    carry = x >> 31
+    shifted = x << 1
+    incoming = jnp.concatenate(
+        [jnp.zeros(x.shape[:-1] + (1,), jnp.uint32), carry[..., :-1]], axis=-1
+    )
+    return shifted | incoming
+
+
+def msb(x: jnp.ndarray) -> jnp.ndarray:
+    """Most significant bit (bit ``n_bits-1``) of ``[..., nw]`` bitvector(s)."""
+    return (x[..., -1] >> 31) & 1
+
+
+def get_bit(x: jnp.ndarray, pos) -> jnp.ndarray:
+    """Bit at dynamic position ``pos`` of ``[..., nw]`` bitvector(s) -> uint32 0/1.
+
+    ``pos`` may be a traced scalar; gathers along the word axis.
+    """
+    word = pos // WORD_BITS
+    off = (pos % WORD_BITS).astype(jnp.uint32) if hasattr(pos, "astype") else pos % WORD_BITS
+    w = jnp.take(x, word, axis=-1)
+    return (w >> off) & 1
+
+
+def pattern_bitmasks(pattern: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Build the PM table for a (sub-)pattern.
+
+    ``pattern``: ``[..., L] int8/int32`` with ``L == n_bits`` (pad with
+    WILDCARD to reach ``n_bits``).  Returns ``[..., NUM_CHARS, nw] uint32``
+    where ``PM[c]`` has bit ``n_bits-1-j`` equal to **0** iff pattern char
+    ``j`` matches text char ``c`` (0 = match, as in Bitap).
+    """
+    nw = n_words(n_bits)
+    if pattern.shape[-1] != n_bits:
+        raise ValueError(f"pattern length {pattern.shape[-1]} != n_bits {n_bits}")
+    p = pattern.astype(jnp.int32)
+    rev = p[..., ::-1]  # rev[g] = pattern char at bit g
+    chars = jnp.arange(NUM_CHARS, dtype=jnp.int32)
+    # match[..., c, g]
+    m = (rev[..., None, :] == chars[:, None]) | (rev[..., None, :] == WILDCARD)
+    mm = (~m).astype(jnp.uint32)  # 1 = mismatch
+    mm = mm.reshape(mm.shape[:-1] + (nw, WORD_BITS))
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(mm * weights, axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,46 @@
+"""Use case 3: edit distance calculation between two arbitrary-length
+sequences (paper §4.8, §4.10.4).
+
+Per the paper, the windowed DC+TB pipeline is reused (the TB walk drives
+the divide-and-conquer advance) but no CIGAR is emitted by default.  For
+short sequences the full-length multi-word Bitap is also provided.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .genasm import GenASMConfig, align
+from .genasm_dc import bitap_search
+from .myers import myers_distance
+
+
+@partial(jax.jit, static_argnames=("cfg", "p_cap"))
+def genasm_distance(a: jnp.ndarray, b: jnp.ndarray, a_len, b_len, *,
+                    cfg: GenASMConfig = GenASMConfig(), p_cap: int | None = None):
+    """Edit distance of ``a`` (pattern) vs ``b`` (text) via windowed GenASM.
+
+    Semi-global semantics (pattern consumed, free text end); pass
+    ``b_len = a_len`` region for a global-ish distance.  Returns int32
+    distance, -1 when the per-window threshold was exceeded.
+    """
+    res = align(b, a, a_len, b_len, cfg=cfg, p_cap=p_cap, emit_cigar=False)
+    return res.distance
+
+
+def genasm_distance_batch(a, b, a_lens, b_lens, *, cfg=GenASMConfig()):
+    f = partial(genasm_distance, cfg=cfg)
+    return jax.vmap(f)(a, b, a_lens, b_lens)
+
+
+@partial(jax.jit, static_argnames=("m_bits", "k"))
+def bitap_distance(a: jnp.ndarray, b: jnp.ndarray, *, m_bits: int, k: int):
+    """Full-length Bitap distance (short sequences; exact, threshold k)."""
+    return jnp.min(bitap_search(b, a, m_bits=m_bits, k=k))
+
+
+def myers_distance_batch(texts, patterns, m_lens, *, m_bits: int, mode="global"):
+    f = partial(myers_distance, m_bits=m_bits, mode=mode)
+    return jax.vmap(f)(texts, patterns, m_lens)

@@ -1,0 +1,146 @@
+"""GenASM-DC: the paper's modified Bitap distance calculation (Algorithm 1).
+
+Two entry points:
+  * :func:`window_dc` — one divide-and-conquer window (sub-text vs
+    sub-pattern, both ``W`` chars), emitting the intermediate M/I/D
+    bitvectors GenASM-TB walks (the "TB-SRAM" contents).  Pure-JAX
+    reference path; the Pallas kernel in ``repro.kernels.genasm_dc``
+    computes the identical function for batches of windows.
+  * :func:`bitap_search` — full-length multi-word Bitap over a text
+    region, reporting the minimum distance and every match location's
+    distance (used by the pre-alignment filter and as a building block
+    for edit-distance calculation).
+
+All loops use ``jax.lax`` control flow so they lower to compact HLO.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .bitvector import msb, n_words, ones, pattern_bitmasks, shl1
+
+# TB-store layout along axis -2: match, insertion, deletion.  The
+# substitution vector is derived as shl1(deletion) (paper §4.6).
+TB_MATCH, TB_INS, TB_DEL = 0, 1, 2
+
+
+def dc_step(R_old: jnp.ndarray, cur_pm: jnp.ndarray, k: int):
+    """One text-character step of GenASM-DC.
+
+    ``R_old``: ``[k+1, nw]`` status bitvectors from the previous text char.
+    ``cur_pm``: ``[nw]`` pattern bitmask of the current text char.
+    Returns ``(R_new [k+1, nw], store [k+1, 3, nw])`` where ``store`` holds
+    the intermediate (M, I, D) bitvectors for traceback.
+    """
+    nw = R_old.shape[-1]
+    R0 = shl1(R_old[0]) | cur_pm
+
+    def d_step(r_prev_new, olds):
+        oldRdm1, oldRd = olds
+        D = oldRdm1
+        S = shl1(oldRdm1)
+        I = shl1(r_prev_new)
+        M = shl1(oldRd) | cur_pm
+        Rd = D & S & I & M
+        return Rd, (M, I, D, Rd)
+
+    if k > 0:
+        _, (Ms, Is, Ds, Rds) = lax.scan(d_step, R0, (R_old[:-1], R_old[1:]))
+        R_new = jnp.concatenate([R0[None], Rds], axis=0)
+        M_all = jnp.concatenate([R0[None], Ms], axis=0)
+        I_all = jnp.concatenate([ones((1, nw)), Is], axis=0)
+        D_all = jnp.concatenate([ones((1, nw)), Ds], axis=0)
+    else:
+        R_new = R0[None]
+        M_all = R0[None]
+        I_all = ones((1, nw))
+        D_all = ones((1, nw))
+    store = jnp.stack([M_all, I_all, D_all], axis=1)  # [k+1, 3, nw]
+    return R_new, store
+
+
+@partial(jax.jit, static_argnames=("w", "k"))
+def window_dc(sub_text: jnp.ndarray, sub_pattern: jnp.ndarray, *, w: int, k: int):
+    """GenASM-DC over one window.
+
+    ``sub_text``/``sub_pattern``: ``[w] int8`` base ids (4 = sentinel /
+    wildcard).  Text is scanned ``i = w-1 .. 0`` and the window answers at
+    ``i = 0`` (candidate-anchored alignment start).
+
+    Returns:
+      ``d_min``: ``int32`` minimum distance (== ``k+1`` when no alignment).
+      ``tb``: ``[w, k+1, 3, nw] uint32`` — intermediate bitvectors indexed
+      by *text position* ``i`` (``tb[0]`` is the last-computed iteration,
+      where traceback starts).
+    """
+    nw = n_words(w)
+    pm = pattern_bitmasks(sub_pattern, w)  # [5, nw]
+    R_init = ones((k + 1, nw))
+
+    def step(R_old, i):
+        cur_pm = pm[sub_text[i]]
+        R_new, store = dc_step(R_old, cur_pm, k)
+        return R_new, store
+
+    idx = jnp.arange(w - 1, -1, -1)
+    R_fin, stores = lax.scan(step, R_init, idx)
+    tb = stores[::-1]  # index by text position i (scan emitted i = w-1 first)
+    m = msb(R_fin)  # [k+1]; 0 = full pattern matches text[0:] with <= d edits
+    found = m == 0
+    d_min = jnp.where(jnp.any(found), jnp.argmax(found), k + 1).astype(jnp.int32)
+    return d_min, tb
+
+
+@partial(jax.jit, static_argnames=("w", "k"))
+def window_dc_r(sub_text: jnp.ndarray, sub_pattern: jnp.ndarray, *, w: int, k: int):
+    """GenASM-DC storing only the status rows R (beyond-paper TB-store
+    compression, §Perf #3): all four TB check vectors derive from R.
+
+    Returns ``(d_min, R_store [w+1, k+1, nw])`` — row ``w`` is the all-ones
+    boundary (i = w), row ``i`` the status after processing text char i.
+    """
+    nw = n_words(w)
+    pm = pattern_bitmasks(sub_pattern, w)
+    R_init = ones((k + 1, nw))
+
+    def step(R_old, i):
+        R_new, _ = dc_step(R_old, pm[sub_text[i]], k)
+        return R_new, R_new
+
+    idx = jnp.arange(w - 1, -1, -1)
+    R_fin, rows = lax.scan(step, R_init, idx)
+    store = jnp.concatenate([rows[::-1], R_init[None]], axis=0)  # [w+1, k+1, nw]
+    m = msb(R_fin)
+    found = m == 0
+    d_min = jnp.where(jnp.any(found), jnp.argmax(found), k + 1).astype(jnp.int32)
+    return d_min, store
+
+
+@partial(jax.jit, static_argnames=("m_bits", "k"))
+def bitap_search(text: jnp.ndarray, pattern: jnp.ndarray, *, m_bits: int, k: int):
+    """Full-length multi-word Bitap search of ``pattern`` in ``text``.
+
+    ``text``: ``[n] int8``; ``pattern``: ``[m_bits] int8`` (wildcard-padded).
+    Returns ``dists [n] int32``: for each text position ``i``, the minimum
+    ``d <= k`` such that the full pattern matches ``text[i:]`` with ``d``
+    edits (``k+1`` where none).  ``dists.min()`` is the semi-global
+    distance; used by the pre-alignment filter.
+    """
+    pm = pattern_bitmasks(pattern, m_bits)
+    k = int(k)
+    R_init = ones((k + 1, n_words(m_bits)))
+
+    def step(R_old, i):
+        R_new, _ = dc_step(R_old, pm[text[i]], k)
+        m = msb(R_new)
+        found = m == 0
+        d = jnp.where(jnp.any(found), jnp.argmax(found), k + 1).astype(jnp.int32)
+        return R_new, d
+
+    n = text.shape[0]
+    _, dists_rev = lax.scan(step, R_init, jnp.arange(n - 1, -1, -1))
+    return dists_rev[::-1]

@@ -1,0 +1,253 @@
+"""GenASM-TB: the paper's Bitap-compatible traceback (Algorithm 2).
+
+Walks the per-(text position, distance) intermediate bitvectors emitted by
+GenASM-DC from the MSB (pattern[0]) toward the LSB, following the chain of
+0s and reverting the DC bitwise operations.  Emits packed CIGAR ops:
+
+    0 = M (match)   1 = X (substitution)   2 = I (insertion)   3 = D (deletion)
+    -1 = padding
+
+The check order implements the paper's "partial support for complex scoring
+schemes": with ``affine=True`` a gap extension (previous op was I/D and the
+same gap can continue) is preferred, mimicking the affine gap model; the
+remaining priority is match > substitution > insertion > deletion.
+
+The walk is data-dependent and sequential per alignment (the ASIC uses an
+FSM); here it is a fixed-trip ``fori_loop`` so it vmaps across thousands of
+alignments — on TPU the batch axis is the vector axis (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .bitvector import get_bit
+from .genasm_dc import TB_DEL, TB_INS, TB_MATCH
+
+OP_M, OP_X, OP_I, OP_D = 0, 1, 2, 3
+OP_PAD = -1
+
+
+@partial(jax.jit, static_argnames=("w", "o", "k", "affine"))
+def window_tb(
+    tb: jnp.ndarray,
+    d_start: jnp.ndarray,
+    cap_p: jnp.ndarray,
+    *,
+    w: int,
+    o: int,
+    k: int,
+    affine: bool = True,
+):
+    """Traceback over one window.
+
+    ``tb``: ``[w, k+1, 3, nw] uint32`` from :func:`window_dc`.
+    ``d_start``: window minimum distance (int32).
+    ``cap_p``: pattern commit cap — ``min(w - o, remaining pattern)``.
+
+    Returns ``(pc, tc, err_used, ops [2*(w-o)] int8, n_ops, stuck)``.
+    """
+    max_steps = 2 * (w - o)
+    cap_t = jnp.int32(w - o)
+    cap_p = jnp.asarray(cap_p, jnp.int32)
+
+    def body(_, st):
+        patternI, textI, curError, prev_op, pc, tc, n_ops, ops, stuck = st
+        active = (pc < cap_p) & (tc < cap_t) & (patternI >= 0) & (~stuck)
+
+        ti = jnp.clip(textI, 0, w - 1)
+        de = jnp.clip(curError, 0, k)
+        vec = tb[ti, de]  # [3, nw]
+        mvec, ivec, dvec = vec[TB_MATCH], vec[TB_INS], vec[TB_DEL]
+        pi = jnp.clip(patternI, 0, w - 1)
+        mbit = get_bit(mvec, pi) == 0
+        ibit = get_bit(ivec, pi) == 0
+        dbit = get_bit(dvec, pi) == 0
+        # substitution vector = shl1(deletion vector): bit pi of S is bit
+        # pi-1 of D, and the shifted-in LSB is 0 (always "available").
+        sbit = jnp.where(pi == 0, True, get_bit(dvec, jnp.maximum(pi - 1, 0)) == 0)
+
+        has_err = curError > 0
+        m_ok = mbit
+        s_ok = sbit & has_err
+        i_ok = ibit & has_err
+        d_ok = dbit & has_err
+
+        if affine:
+            cands = jnp.stack(
+                [
+                    i_ok & (prev_op == OP_I),
+                    d_ok & (prev_op == OP_D),
+                    m_ok,
+                    s_ok,
+                    i_ok,
+                    d_ok,
+                ]
+            )
+            codes = jnp.array([OP_I, OP_D, OP_M, OP_X, OP_I, OP_D], jnp.int32)
+        else:
+            cands = jnp.stack([m_ok, s_ok, i_ok, d_ok])
+            codes = jnp.array([OP_M, OP_X, OP_I, OP_D], jnp.int32)
+
+        any_ok = jnp.any(cands)
+        op = codes[jnp.argmax(cands)]
+        new_stuck = stuck | (active & ~any_ok)
+        take = active & any_ok
+
+        consume_p = take & ((op == OP_M) | (op == OP_X) | (op == OP_I))
+        consume_t = take & ((op == OP_M) | (op == OP_X) | (op == OP_D))
+        err_dec = take & (op != OP_M)
+
+        ops = ops.at[n_ops].set(jnp.where(take, op.astype(jnp.int8), ops[n_ops]))
+        return (
+            patternI - consume_p.astype(jnp.int32),
+            textI + consume_t.astype(jnp.int32),
+            curError - err_dec.astype(jnp.int32),
+            jnp.where(take, op, prev_op),
+            pc + consume_p.astype(jnp.int32),
+            tc + consume_t.astype(jnp.int32),
+            n_ops + take.astype(jnp.int32),
+            ops,
+            new_stuck,
+        )
+
+    st0 = (
+        jnp.int32(w - 1),  # patternI: MSB = pattern[0]
+        jnp.int32(0),  # textI
+        d_start.astype(jnp.int32),
+        jnp.int32(OP_PAD),  # prev_op
+        jnp.int32(0),  # pc
+        jnp.int32(0),  # tc
+        jnp.int32(0),  # n_ops
+        jnp.full((max_steps,), OP_PAD, jnp.int8),
+        jnp.asarray(False),
+    )
+    patternI, textI, curError, _, pc, tc, n_ops, ops, stuck = lax.fori_loop(
+        0, max_steps, body, st0
+    )
+    err_used = d_start.astype(jnp.int32) - curError
+    return pc, tc, err_used, ops, n_ops, stuck
+
+
+@partial(jax.jit, static_argnames=("w", "o", "k", "affine"))
+def window_tb_r(
+    store_r: jnp.ndarray,
+    sub_text: jnp.ndarray,
+    pm: jnp.ndarray,
+    d_start: jnp.ndarray,
+    cap_p: jnp.ndarray,
+    *,
+    w: int,
+    o: int,
+    k: int,
+    affine: bool = True,
+):
+    """Traceback over R-only storage (kernel v2 path, §Perf #3).
+
+    ``store_r``: [w+1, k+1, nw] from :func:`window_dc_r` / kernel v2;
+    ``pm``: [5, nw] pattern bitmasks of the sub-pattern.  Check-vector
+    derivation: D=R(i+1,d−1), S=shl1(D), I=shl1(R(i,d−1)),
+    M=shl1(R(i+1,d)) | PM[text[i]].
+    """
+    max_steps = 2 * (w - o)
+    cap_t = jnp.int32(w - o)
+    cap_p = jnp.asarray(cap_p, jnp.int32)
+
+    def bit_or_true_at0(vec, b):
+        # bit b of shl1(vec): shifted-in 0 at b == 0 (always "available")
+        return jnp.where(b == 0, True,
+                         get_bit(vec, jnp.maximum(b - 1, 0)) == 0)
+
+    def body(_, st):
+        patternI, textI, curError, prev_op, pc, tc, n_ops, ops, stuck = st
+        active = (pc < cap_p) & (tc < cap_t) & (patternI >= 0) & (~stuck)
+        ti = jnp.clip(textI, 0, w - 1)
+        de = jnp.clip(curError, 0, k)
+        dem1 = jnp.clip(curError - 1, 0, k)
+        pi = jnp.clip(patternI, 0, w - 1)
+
+        r_next_d = store_r[ti + 1, de]  # R(i+1, d)
+        r_next_dm1 = store_r[ti + 1, dem1]  # R(i+1, d-1)
+        r_here_dm1 = store_r[ti, dem1]  # R(i, d-1)
+        pm_bit = get_bit(pm[sub_text[ti]], pi) == 0
+
+        mbit = pm_bit & bit_or_true_at0(r_next_d, pi)
+        ibit = bit_or_true_at0(r_here_dm1, pi)
+        dbit = get_bit(r_next_dm1, pi) == 0
+        sbit = bit_or_true_at0(r_next_dm1, pi)
+
+        has_err = curError > 0
+        m_ok = mbit
+        s_ok = sbit & has_err
+        i_ok = ibit & has_err
+        d_ok = dbit & has_err
+
+        if affine:
+            cands = jnp.stack([
+                i_ok & (prev_op == OP_I), d_ok & (prev_op == OP_D),
+                m_ok, s_ok, i_ok, d_ok,
+            ])
+            codes = jnp.array([OP_I, OP_D, OP_M, OP_X, OP_I, OP_D], jnp.int32)
+        else:
+            cands = jnp.stack([m_ok, s_ok, i_ok, d_ok])
+            codes = jnp.array([OP_M, OP_X, OP_I, OP_D], jnp.int32)
+
+        any_ok = jnp.any(cands)
+        op = codes[jnp.argmax(cands)]
+        new_stuck = stuck | (active & ~any_ok)
+        take = active & any_ok
+        consume_p = take & ((op == OP_M) | (op == OP_X) | (op == OP_I))
+        consume_t = take & ((op == OP_M) | (op == OP_X) | (op == OP_D))
+        err_dec = take & (op != OP_M)
+        ops = ops.at[n_ops].set(jnp.where(take, op.astype(jnp.int8), ops[n_ops]))
+        return (
+            patternI - consume_p.astype(jnp.int32),
+            textI + consume_t.astype(jnp.int32),
+            curError - err_dec.astype(jnp.int32),
+            jnp.where(take, op, prev_op),
+            pc + consume_p.astype(jnp.int32),
+            tc + consume_t.astype(jnp.int32),
+            n_ops + take.astype(jnp.int32),
+            ops,
+            new_stuck,
+        )
+
+    st0 = (
+        jnp.int32(w - 1), jnp.int32(0), d_start.astype(jnp.int32),
+        jnp.int32(OP_PAD), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+        jnp.full((max_steps,), OP_PAD, jnp.int8), jnp.asarray(False),
+    )
+    patternI, textI, curError, _, pc, tc, n_ops, ops, stuck = lax.fori_loop(
+        0, max_steps, body, st0)
+    err_used = d_start.astype(jnp.int32) - curError
+    return pc, tc, err_used, ops, n_ops, stuck
+
+
+def cigar_counts(ops: jnp.ndarray, n_ops: jnp.ndarray):
+    """Counts of (M, X, I, D) over the valid prefix of a packed op buffer."""
+    idx = jnp.arange(ops.shape[-1])
+    valid = idx < n_ops[..., None]
+    out = []
+    for code in (OP_M, OP_X, OP_I, OP_D):
+        out.append(jnp.sum(valid & (ops == code), axis=-1))
+    return jnp.stack(out, axis=-1)
+
+
+def cigar_score(ops: jnp.ndarray, n_ops: jnp.ndarray, *, match=2, subs=-4, gap_open=-4, gap_extend=-2):
+    """Affine-gap score of a packed CIGAR (Minimap2-style defaults)."""
+    idx = jnp.arange(ops.shape[-1])
+    valid = idx < n_ops[..., None]
+    prev = jnp.concatenate([jnp.full(ops.shape[:-1] + (1,), OP_PAD, ops.dtype), ops[..., :-1]], -1)
+    is_gap = (ops == OP_I) | (ops == OP_D)
+    opens = is_gap & (ops != prev)
+    # minimap2 convention: a gap of length L costs open + L·extend
+    s = (
+        match * jnp.sum(valid & (ops == OP_M), -1)
+        + subs * jnp.sum(valid & (ops == OP_X), -1)
+        + gap_open * jnp.sum(valid & opens, -1)
+        + gap_extend * jnp.sum(valid & is_gap, -1)
+    )
+    return s

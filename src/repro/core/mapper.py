@@ -1,0 +1,114 @@
+"""End-to-end linear read mapper (paper Figure 2-2 with GenASM inside).
+
+Seed-and-extend: MinSeed-style minimizer seeding → GenASM-DC pre-alignment
+filter over candidates → windowed GenASM DC+TB alignment of the best
+candidate.  The full per-read pipeline is one jitted function; batches
+vmap and the launcher shards reads over ``("pod", "data")`` with the
+minimizer index replicated or sharded over ``"model"`` (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitvector import SENTINEL, WILDCARD
+from .genasm import GenASMConfig, align
+from .genasm_dc import bitap_search
+from .minimizer_index import ReferenceIndex, build_reference_index
+from .segram.minimizer import seed_candidates
+
+
+class MapResult(NamedTuple):
+    position: jnp.ndarray  # int32 mapped reference start (-1 if unmapped)
+    distance: jnp.ndarray  # int32 edit distance (-1 if unmapped)
+    ops: jnp.ndarray  # packed CIGAR
+    n_ops: jnp.ndarray
+    failed: jnp.ndarray
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "p_cap", "filter_bits", "filter_k", "max_candidates",
+        "minimizer_w", "minimizer_k",
+    ),
+)
+def map_read(
+    index: ReferenceIndex,
+    read: jnp.ndarray,
+    read_len,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    max_candidates: int = 4,
+    minimizer_w: int = 10,
+    minimizer_k: int = 15,
+) -> MapResult:
+    """Map one read against the indexed reference."""
+    starts, votes = seed_candidates(
+        read,
+        index.hashes,
+        index.positions,
+        w=minimizer_w,
+        k=minimizer_k,
+        max_candidates=max_candidates,
+    )
+    L = index.ref.shape[0]
+    # candidate starts are diagonal-bucketed to 32 (minimizer voting), so the
+    # filter window must absorb bucket quantization + k edits of drift
+    margin = filter_k + 32
+    t_cap = p_cap + cfg.w * 2
+
+    # --- pre-alignment filter (use case 2): exact distance of the read's
+    # first filter_bits bases against each candidate region prefix.
+    fpat = jnp.where(
+        jnp.arange(filter_bits) < jnp.minimum(read_len, filter_bits),
+        read[:filter_bits], WILDCARD,
+    ).astype(jnp.int8)
+
+    def filt(s):
+        s0 = jnp.clip(s - margin, 0, jnp.maximum(L - 1, 0))
+        region = jax.lax.dynamic_slice(
+            jnp.concatenate([index.ref, jnp.full((filter_bits + 2 * margin,),
+                                                 SENTINEL, jnp.int8)]),
+            (s0,), (filter_bits + 2 * margin,),
+        )
+        dists = bitap_search(region, fpat, m_bits=filter_bits, k=filter_k)
+        return jnp.min(dists), s0 + jnp.argmin(dists)
+
+    fd, fpos = jax.vmap(filt)(starts)
+    fd = jnp.where(votes > 0, fd, filter_k + 1)
+    best = jnp.argmin(fd)
+    pos = fpos[best]
+    prefilter_ok = fd[best] <= filter_k
+
+    # --- alignment (use case 1): windowed GenASM at the filtered position.
+    text = jax.lax.dynamic_slice(
+        jnp.concatenate([index.ref, jnp.full((t_cap,), SENTINEL, jnp.int8)]),
+        (pos,), (t_cap,),
+    )
+    r = read[:p_cap]
+    if r.shape[0] < p_cap:
+        r = jnp.pad(r, (0, p_cap - r.shape[0]), constant_values=WILDCARD)
+    pat = jnp.where(jnp.arange(p_cap) < read_len, r, WILDCARD).astype(jnp.int8)
+    res = align(text, pat, read_len.astype(jnp.int32),
+                jnp.minimum(L - pos, t_cap).astype(jnp.int32), cfg=cfg, p_cap=p_cap)
+    failed = res.failed | (~prefilter_ok)
+    return MapResult(
+        position=jnp.where(failed, -1, pos).astype(jnp.int32),
+        distance=jnp.where(failed, -1, res.distance),
+        ops=res.ops,
+        n_ops=res.n_ops,
+        failed=failed,
+    )
+
+
+def map_batch(index: ReferenceIndex, reads, read_lens, **kw):
+    f = partial(map_read, index, **kw)
+    return jax.vmap(f)(reads, read_lens)

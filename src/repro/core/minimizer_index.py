@@ -1,0 +1,25 @@
+"""Device-resident reference index for the linear mapper."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .segram.minimizer import build_index
+
+
+class ReferenceIndex(NamedTuple):
+    ref: jnp.ndarray  # [L] int8 reference bases
+    hashes: jnp.ndarray  # [M] uint32 sorted minimizer hashes
+    positions: jnp.ndarray  # [M] int32
+
+
+def build_reference_index(ref: np.ndarray, *, w: int = 10, k: int = 15,
+                          freq_frac: float = 0.0002) -> ReferenceIndex:
+    idx = build_index(ref, w=w, k=k, freq_frac=freq_frac)
+    return ReferenceIndex(
+        ref=jnp.asarray(ref.astype(np.int8)),
+        hashes=jnp.asarray(idx.hashes),
+        positions=jnp.asarray(idx.positions),
+    )

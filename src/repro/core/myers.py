@@ -1,0 +1,100 @@
+"""Myers' 1999 bit-parallel edit distance — the Edlib software baseline.
+
+The paper's Use Case 3 (§4.10.4) compares GenASM against Edlib, whose core
+is Myers' bitvector algorithm.  We implement the multi-word (blocked)
+variant in JAX so the benchmark compares *algorithms* on identical
+hardware.  Bit convention differs from Bitap: bit ``j`` ↔ pattern position
+``j`` (LSB = pattern[0]) and 1 = match in ``PEq``.
+
+Supports the global (NW) score and the semi-global search score
+(min over text end positions, free text start), per Hyyrö's formulation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .bitvector import WORD_BITS, n_words
+
+
+def _peq(pattern: jnp.ndarray, m_bits: int) -> jnp.ndarray:
+    """[5, nw] uint32; bit j of PEq[c] = 1 iff pattern[j] == c (wildcard matches all)."""
+    nw = n_words(m_bits)
+    p = pattern.astype(jnp.int32)
+    chars = jnp.arange(5, dtype=jnp.int32)
+    m = (p[None, :] == chars[:, None]) | (p[None, :] == 4)
+    m = m.astype(jnp.uint32).reshape(5, nw, WORD_BITS)
+    weights = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(m * weights, axis=-1, dtype=jnp.uint32)
+
+
+def _add_with_carry(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Multi-word add (little-endian word axis -1), dropping the final carry."""
+
+    def step(cin, ab):
+        aw, bw = ab
+        s1 = aw + bw
+        c1 = (s1 < aw).astype(jnp.uint32)
+        s2 = s1 + cin
+        c2 = (s2 < s1).astype(jnp.uint32)
+        return c1 | c2, s2
+
+    _, out = lax.scan(step, jnp.uint32(0), (a, b))
+    return out
+
+
+def _shl1_in(x: jnp.ndarray, bit_in) -> jnp.ndarray:
+    carry = x >> 31
+    shifted = x << 1
+    incoming = jnp.concatenate(
+        [jnp.asarray(bit_in, jnp.uint32)[None], carry[:-1]], axis=0
+    )
+    return shifted | incoming
+
+
+@partial(jax.jit, static_argnames=("m_bits", "mode"))
+def myers_distance(text: jnp.ndarray, pattern: jnp.ndarray, m_len, *, m_bits: int,
+                   mode: str = "global"):
+    """Edit distance by Myers' algorithm.
+
+    ``text``: [n] int8; ``pattern``: [m_bits] int8 (pad with wildcard —
+    wildcards bias the score by matching everything, so callers must pass
+    ``m_len`` = real pattern length; the score is read at bit ``m_len-1``).
+
+    ``mode``: "global" (NW distance of pattern vs full text) or "semiglobal"
+    (min over text prefixes, free start — Edlib's HW/search-ish mode).
+    Returns int32 distance.
+    """
+    nw = n_words(m_bits)
+    peq = _peq(pattern, m_bits)
+    score_word = (m_len - 1) // WORD_BITS
+    score_off = ((m_len - 1) % WORD_BITS).astype(jnp.uint32)
+
+    Pv0 = jnp.full((nw,), 0xFFFFFFFF, jnp.uint32)
+    Mv0 = jnp.zeros((nw,), jnp.uint32)
+    carry_in = jnp.uint32(1) if mode == "global" else jnp.uint32(0)
+
+    def step(state, c):
+        Pv, Mv, score = state
+        Eq = peq[c]
+        Xv = Eq | Mv
+        Xh = (_add_with_carry(Eq & Pv, Pv) ^ Pv) | Eq
+        Ph = Mv | ~(Xh | Pv)
+        Mh = Pv & Xh
+        ph_bit = (jnp.take(Ph, score_word) >> score_off) & 1
+        mh_bit = (jnp.take(Mh, score_word) >> score_off) & 1
+        score = score + ph_bit.astype(jnp.int32) - mh_bit.astype(jnp.int32)
+        Ph = _shl1_in(Ph, carry_in)
+        Mh = _shl1_in(Mh, jnp.uint32(0))
+        Pv = Mh | ~(Xv | Ph)
+        Mv = Ph & Xv
+        return (Pv, Mv, score), score
+
+    init = (Pv0, Mv0, m_len.astype(jnp.int32))
+    (_, _, final), scores = lax.scan(step, init, text.astype(jnp.int32))
+    if mode == "global":
+        return final
+    return jnp.minimum(jnp.min(scores), m_len.astype(jnp.int32))

@@ -1,0 +1,219 @@
+"""BitAlign: bitvector-based sequence-to-graph alignment (paper §6.7, §6.8.2).
+
+Generalizes GenASM-DC to a DAG: scanning the linearized subgraph in
+*reverse topological order*, the "previous text character" bitvectors are
+the AND-combination of all successors' status bitvectors within the hop
+window (0 = match, so AND is the union of matching paths — exactly the
+paper's hopBits combine in Figure 6-9).  A ring buffer holds the last
+``HOP_LIMIT`` nodes' R matrices, mirroring the hop-queue in the BitAlign
+PE design (Figure 6-8).
+
+Traceback re-derives the chosen successor at each step from the stored
+per-node status bitvectors (the information the ASIC keeps in TB-SRAMs):
+an op that consumes a graph node is valid only if some successor's R
+continues the 0-chain, and the successor taken is recorded as the path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..bitvector import get_bit, msb, n_words, ones, pattern_bitmasks, shl1
+from ..genasm_tb import OP_D, OP_I, OP_M, OP_PAD, OP_X
+from .graph import HOP_LIMIT
+
+
+def _tail_mask(p_len, m_bits: int) -> jnp.ndarray:
+    """[nw] uint32: ones with the low ``m_bits - p_len`` bits cleared.
+
+    Word-aligned patterns shorter than ``m_bits`` are handled by treating
+    the wildcard tail as *pre-matched everywhere*: every status bitvector
+    keeps its low ``pad`` bits at 0, so the tail never consumes graph
+    nodes (no sentinel-chain surgery at subgraph boundaries needed).
+    """
+    nw = n_words(m_bits)
+    pad = (jnp.int32(m_bits) - jnp.asarray(p_len, jnp.int32))
+    bits_below = jnp.clip(pad - 32 * jnp.arange(nw, dtype=jnp.int32), 0, 32)
+    low = jnp.where(
+        bits_below >= 32,
+        jnp.uint32(0xFFFFFFFF),
+        (jnp.uint32(1) << bits_below.astype(jnp.uint32)) - 1,
+    )
+    return ~low
+
+
+@partial(jax.jit, static_argnames=("m_bits", "k"))
+def bitalign_dc(bases: jnp.ndarray, succ_bits: jnp.ndarray, pattern: jnp.ndarray,
+                p_len, *, m_bits: int, k: int):
+    """DC over a linearized subgraph.
+
+    ``bases``: [N] int8 (4 = sentinel pad);  ``succ_bits``: [N] uint32
+    hopBits;  ``pattern``: [m_bits] int8 wildcard-padded; ``p_len`` its
+    real length.
+
+    Returns ``(dists [N] int32, store [N, k+1, 4, nw] uint32)`` where
+    ``dists[i]`` is the min d ≤ k aligning the full pattern to a path
+    starting at node i (k+1 if none) and ``store`` holds (R, M, I, D).
+    """
+    nw = n_words(m_bits)
+    pm = pattern_bitmasks(pattern, m_bits)
+    H = HOP_LIMIT
+    tail = _tail_mask(p_len, m_bits)  # [nw]
+    tail_full = jnp.broadcast_to(tail, (k + 1, nw))
+
+    def step(hist, inputs):
+        # hist: [H, k+1, nw] — hist[h] = R of node i+1+h
+        base, sb = inputs
+        hop_ok = ((sb >> jnp.arange(H, dtype=jnp.uint32)) & 1).astype(bool)  # [H]
+        masked = jnp.where(hop_ok[:, None, None], hist, tail_full[None])
+        comb = masked[0]
+        for h in range(1, H):
+            comb = comb & masked[h]  # [k+1, nw]; ones when no successor
+        cur_pm = pm[base]
+        R0 = shl1(comb[0]) | cur_pm
+        rows = [R0]
+        Ms, Is, Ds = [R0], [ones((nw,))], [ones((nw,))]
+        for d in range(1, k + 1):
+            D = comb[d - 1]
+            S = shl1(comb[d - 1])
+            I = shl1(rows[d - 1])
+            M = shl1(comb[d]) | cur_pm
+            rows.append(D & S & I & M)
+            Ms.append(M)
+            Is.append(I)
+            Ds.append(D)
+        R = jnp.stack(rows)  # [k+1, nw]
+        st = jnp.stack([R, jnp.stack(Ms), jnp.stack(Is), jnp.stack(Ds)], axis=1)
+        new_hist = jnp.concatenate([R[None], hist[:-1]], axis=0)
+        m = msb(R)
+        found = m == 0
+        d_i = jnp.where(jnp.any(found), jnp.argmax(found), k + 1).astype(jnp.int32)
+        return new_hist, (d_i, st)
+
+    hist0 = jnp.broadcast_to(tail_full, (H, k + 1, nw))
+    _, (dists_rev, store_rev) = lax.scan(
+        step, hist0, (bases[::-1].astype(jnp.int32), succ_bits[::-1])
+    )
+    return dists_rev[::-1], store_rev[::-1]
+
+
+@partial(jax.jit, static_argnames=("m_bits", "k", "max_steps"))
+def bitalign_tb(store: jnp.ndarray, succ_bits: jnp.ndarray, start_node, d_start,
+                p_len, *, m_bits: int, k: int, max_steps: int | None = None):
+    """Graph traceback from ``start_node`` with ``d_start`` errors.
+
+    ``store``: [N, k+1, 4, nw] from :func:`bitalign_dc` (R, M, I, D).
+    Returns ``(ops [steps] int8, n_ops int32, nodes [steps] int32, stuck bool)``
+    where ``nodes[s]`` is the graph node consumed at step s (-1 for I ops).
+    """
+    H = HOP_LIMIT
+    n = store.shape[0]
+    if max_steps is None:
+        max_steps = m_bits + k
+    hop_rng = jnp.arange(H)
+
+    def succ_ok(node, d_next, bit_next, succ_mask):
+        pos = jnp.clip(node + 1 + hop_rng, 0, n - 1)
+        Rn = store[pos, jnp.clip(d_next, 0, k), 0]  # [H, nw]
+        bits = jax.vmap(lambda v: get_bit(v, jnp.clip(bit_next, 0, m_bits - 1)))(Rn)
+        in_range = (node + 1 + hop_rng) < n
+        return succ_mask & (bits == 0) & in_range & (d_next >= 0) & (bit_next >= 0)
+
+    def body(_, st):
+        node, b, d, pc, n_ops, ops, nodes, stuck, done = st
+        active = (~done) & (~stuck)
+        ni = jnp.clip(node, 0, n - 1)
+        vec = store[ni, jnp.clip(d, 0, k)]  # [4, nw]
+        M, I, D = vec[1], vec[2], vec[3]
+        pi = jnp.clip(b, 0, m_bits - 1)
+        mbit = get_bit(M, pi) == 0
+        ibit = get_bit(I, pi) == 0
+        dbit = get_bit(D, pi) == 0
+        sbit = jnp.where(pi == 0, True, get_bit(D, jnp.maximum(pi - 1, 0)) == 0)
+        has_err = d > 0
+
+        succ_mask = (
+            (succ_bits[ni] >> hop_rng.astype(jnp.uint32)) & 1
+        ).astype(bool)
+        last_p = pc >= p_len - 1  # this op consumes the final pattern char
+        ok_m_h = succ_ok(node, d, b - 1, succ_mask)
+        ok_s_h = succ_ok(node, d - 1, b - 1, succ_mask)
+        ok_d_h = succ_ok(node, d - 1, b, succ_mask)
+        m_ok = mbit & (last_p | jnp.any(ok_m_h))
+        s_ok = sbit & has_err & (last_p | jnp.any(ok_s_h))
+        i_ok = ibit & has_err
+        d_ok = dbit & has_err & jnp.any(ok_d_h)
+
+        cands = jnp.stack([m_ok, s_ok, i_ok, d_ok])
+        codes = jnp.array([OP_M, OP_X, OP_I, OP_D], jnp.int32)
+        any_ok = jnp.any(cands)
+        sel = jnp.argmax(cands)
+        op = codes[sel]
+        take = active & any_ok
+        new_stuck = stuck | (active & ~any_ok)
+
+        hops = jnp.stack([ok_m_h, ok_s_h, ok_d_h, ok_d_h])[sel]
+        h_star = jnp.argmax(hops)
+        consume_node = take & ((op == OP_M) | (op == OP_X) | (op == OP_D))
+        consume_pat = take & ((op == OP_M) | (op == OP_X) | (op == OP_I))
+        err_dec = take & (op != OP_M)
+
+        ends_walk = consume_pat & last_p
+        next_node = jnp.where(consume_node & ~ends_walk, node + 1 + h_star, node)
+        ops = ops.at[n_ops].set(jnp.where(take, op.astype(jnp.int8), ops[n_ops]))
+        nodes = nodes.at[n_ops].set(
+            jnp.where(take & consume_node, node, jnp.where(take, -1, nodes[n_ops]))
+        )
+        new_pc = pc + consume_pat.astype(jnp.int32)
+        new_done = done | (take & (new_pc >= p_len))
+        return (
+            next_node.astype(jnp.int32),
+            b - consume_pat.astype(jnp.int32),
+            d - err_dec.astype(jnp.int32),
+            new_pc,
+            n_ops + take.astype(jnp.int32),
+            ops,
+            nodes,
+            new_stuck,
+            new_done,
+        )
+
+    st0 = (
+        jnp.asarray(start_node, jnp.int32),
+        jnp.int32(m_bits - 1),
+        jnp.asarray(d_start, jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.full((max_steps,), OP_PAD, jnp.int8),
+        jnp.full((max_steps,), -1, jnp.int32),
+        jnp.asarray(False),
+        p_len <= 0,
+    )
+    _, _, _, _, n_ops, ops, nodes, stuck, done = lax.fori_loop(0, max_steps, body, st0)
+    return ops, n_ops, nodes, stuck | (~done)
+
+
+def bitalign(bases, succ_bits, pattern, p_len, *, m_bits: int, k: int,
+             traceback: bool = True):
+    """Distance (+ optional CIGAR/path) for pattern vs subgraph, free start node.
+
+    Returns dict(distance, start_node, ops, n_ops, nodes, failed).
+    """
+    dists, store = bitalign_dc(bases, succ_bits, pattern, p_len, m_bits=m_bits, k=k)
+    best = jnp.argmin(dists)
+    d = dists[best]
+    out = {
+        "distance": jnp.where(d > k, -1, d).astype(jnp.int32),
+        "start_node": best.astype(jnp.int32),
+        "failed": d > k,
+    }
+    if traceback:
+        ops, n_ops, nodes, stuck = bitalign_tb(
+            store, succ_bits, best, jnp.minimum(d, k), p_len, m_bits=m_bits, k=k
+        )
+        out.update(ops=ops, n_ops=n_ops, nodes=nodes,
+                   failed=out["failed"] | stuck)
+    return out

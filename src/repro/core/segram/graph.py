@@ -1,0 +1,154 @@
+"""Genome graphs for SeGraM (paper §2.5, §6.5).
+
+A graph is a topologically-ordered DAG with one base per node (the paper's
+nodes hold short sequences; one-base nodes are the same graph after
+splitting, and make hopBits uniform).  Successor edges within a bounded
+hop window are encoded as per-node **hopBits** (paper Figure 6-9): bit
+``h`` of ``succ_bits[i]`` set ⇔ node ``i + h + 1`` is a successor of ``i``.
+The linearization keeps variant branches adjacent to their backbone
+position so real variation graphs have small hop distances; edges beyond
+``HOP_LIMIT`` would need graph re-chunking (the paper picks the hop limit
+so this does not occur; construction asserts it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+
+HOP_LIMIT = 16
+
+
+class Variant(NamedTuple):
+    """pos: 0-based backbone position; kind: 'snp' | 'ins' | 'del'.
+
+    snp: ``alt`` (len ≥ 1) replaces ref base(s) at pos.
+    ins: ``alt`` inserted *after* backbone position pos.
+    del: ``span`` backbone bases deleted starting at pos.
+    """
+
+    pos: int
+    kind: str
+    alt: tuple = ()
+    span: int = 1
+
+
+@dataclass
+class GenomeGraph:
+    bases: np.ndarray  # [N] int8, topological order
+    succ_bits: np.ndarray  # [N] uint32 hopBits (successors)
+    backbone: np.ndarray  # [N] int32 backbone coordinate of each node (-1 for alt)
+    node_of_backbone: np.ndarray  # [L] int32 node id of each backbone position
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.bases.shape[0])
+
+
+def build_graph(ref: np.ndarray, variants: list[Variant] = ()) -> GenomeGraph:
+    """Build a variation graph from a linear reference + variant list."""
+    L = len(ref)
+    # nodes assembled in backbone order; alt nodes inserted adjacent
+    bases: list[int] = []
+    backbone: list[int] = []
+    edges: list[tuple[int, int]] = []
+    node_of_backbone = np.full(L, -1, np.int64)
+
+    by_pos: dict[int, list[Variant]] = {}
+    for v in variants:
+        by_pos.setdefault(v.pos, []).append(v)
+
+    prev_tails: list[int] = []  # node ids whose successor is the next backbone node
+    pending_del: dict[int, list[int]] = {}  # backbone pos -> node ids jumping here
+    for p in range(L):
+        nid = len(bases)
+        bases.append(int(ref[p]))
+        backbone.append(p)
+        node_of_backbone[p] = nid
+        for t in prev_tails:
+            edges.append((t, nid))
+        for t in pending_del.pop(p, []):
+            edges.append((t, nid))
+        prev_tails = [nid]
+        for v in by_pos.get(p, []):
+            if v.kind == "snp":
+                alt_id = len(bases)
+                bases.append(int(v.alt[0]))
+                backbone.append(-1)
+                # same predecessors as nid
+                for (a, b) in [e for e in edges if e[1] == nid]:
+                    edges.append((a, alt_id))
+                prev_tails.append(alt_id)
+            elif v.kind == "ins":
+                prev = nid
+                for ab in v.alt:
+                    alt_id = len(bases)
+                    bases.append(int(ab))
+                    backbone.append(-1)
+                    edges.append((prev, alt_id))
+                    prev = alt_id
+                prev_tails.append(prev)
+            elif v.kind == "del":
+                tgt = p + v.span + 1
+                if tgt < L:
+                    pending_del.setdefault(tgt, []).append(nid)
+            else:
+                raise ValueError(v.kind)
+
+    n = len(bases)
+    succ = np.zeros(n, np.uint32)
+    for a, b in edges:
+        hop = b - a - 1
+        if hop < 0:
+            raise ValueError("graph not topologically ordered")
+        if hop >= HOP_LIMIT:
+            raise ValueError(
+                f"edge hop {hop + 1} exceeds HOP_LIMIT={HOP_LIMIT}; re-chunk the graph"
+            )
+        succ[a] |= np.uint32(1) << np.uint32(hop)
+    return GenomeGraph(
+        bases=np.array(bases, np.int8),
+        succ_bits=succ,
+        backbone=np.array(backbone, np.int32),
+        node_of_backbone=node_of_backbone.astype(np.int32),
+    )
+
+
+def linear_graph(ref: np.ndarray) -> GenomeGraph:
+    """Degenerate graph (pure backbone) — BitAlign on it must equal linear Bitap."""
+    return build_graph(ref, [])
+
+
+def extract_subgraph(g: GenomeGraph, start_node: int, length: int):
+    """Fixed-size window of the linearized graph for one candidate region.
+
+    Returns (bases [length] int8 sentinel-padded, succ_bits [length] uint32
+    masked at the boundary).
+    """
+    n = g.n_nodes
+    s = max(0, min(start_node, n))
+    e = min(n, s + length)
+    bases = np.full(length, 4, np.int8)
+    succ = np.zeros(length, np.uint32)
+    bases[: e - s] = g.bases[s:e]
+    succ[: e - s] = g.succ_bits[s:e]
+    # mask successor bits that point past the window end
+    for i in range(max(0, e - s - HOP_LIMIT), e - s):
+        room = e - s - i - 1
+        succ[i] &= np.uint32((1 << max(room, 0)) - 1)
+    return bases, succ
+
+
+def predecessors(g: GenomeGraph) -> list[list[int]]:
+    """Adjacency (predecessor lists) for the numpy DP oracle."""
+    preds: list[list[int]] = [[] for _ in range(g.n_nodes)]
+    for i in range(g.n_nodes):
+        bits = int(g.succ_bits[i])
+        h = 0
+        while bits:
+            if bits & 1:
+                preds[i + h + 1].append(i)
+            bits >>= 1
+            h += 1
+    return preds

@@ -1,0 +1,114 @@
+"""SeGraM: end-to-end sequence-to-graph mapping (paper Figure 6-1).
+
+Pipeline per read: MinSeed (minimizer lookup → candidate subgraph
+regions, Figure 6-5) → BitAlign DC over each candidate subgraph → pick
+the best → BitAlign TB for the CIGAR + path.  Batched over reads with
+vmap; sharding over the data axes happens in the launcher.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitalign import bitalign_dc, bitalign_tb
+from .graph import HOP_LIMIT, GenomeGraph
+from .minimizer import MinimizerIndex, build_index, seed_candidates
+
+
+class SeGraMIndex(NamedTuple):
+    bases: jnp.ndarray  # [N] int8 linearized graph
+    succ_bits: jnp.ndarray  # [N] uint32
+    node_of_backbone: jnp.ndarray  # [L] int32
+    idx_hashes: jnp.ndarray  # sorted minimizer hashes (backbone)
+    idx_positions: jnp.ndarray  # backbone positions
+
+
+def preprocess(ref: np.ndarray, g: GenomeGraph, *, w: int = 10, k: int = 15,
+               ) -> SeGraMIndex:
+    """Offline pre-processing (paper §6.5): graph arrays + minimizer index."""
+    idx = build_index(ref, w=w, k=k)
+    return SeGraMIndex(
+        bases=jnp.asarray(g.bases),
+        succ_bits=jnp.asarray(g.succ_bits),
+        node_of_backbone=jnp.asarray(g.node_of_backbone),
+        idx_hashes=jnp.asarray(idx.hashes),
+        idx_positions=jnp.asarray(idx.positions),
+    )
+
+
+def _window(index: SeGraMIndex, start_node, length: int):
+    """Device-side subgraph window with boundary-masked hopBits."""
+    n = index.bases.shape[0]
+    s = jnp.clip(start_node, 0, jnp.maximum(n - length, 0))
+    bases = jax.lax.dynamic_slice(index.bases, (s,), (length,))
+    succ = jax.lax.dynamic_slice(index.succ_bits, (s,), (length,))
+    room = jnp.clip(length - 1 - jnp.arange(length), 0, 32)
+    mask = jnp.where(
+        room >= 32, jnp.uint32(0xFFFFFFFF),
+        (jnp.uint32(1) << room.astype(jnp.uint32)) - 1,
+    )
+    return bases, succ & mask, s
+
+
+@partial(jax.jit, static_argnames=("m_bits", "k", "win_len", "max_candidates",
+                                   "minimizer_w", "minimizer_k"))
+def map_read(
+    index: SeGraMIndex,
+    read: jnp.ndarray,
+    read_len,
+    *,
+    m_bits: int = 128,
+    k: int = 16,
+    win_len: int = 192,
+    max_candidates: int = 4,
+    minimizer_w: int = 10,
+    minimizer_k: int = 15,
+):
+    """Map one read to the graph.  Returns a dict of mapping results."""
+    starts, votes = seed_candidates(
+        read[:],
+        index.idx_hashes,
+        index.idx_positions,
+        w=minimizer_w,
+        k=minimizer_k,
+        max_candidates=max_candidates,
+    )
+    # backbone coordinate -> node id, with margin for leading variation
+    L = index.node_of_backbone.shape[0]
+    starts_bb = jnp.clip(starts - HOP_LIMIT, 0, L - 1)
+    start_nodes = index.node_of_backbone[starts_bb]
+
+    pat = jnp.where(jnp.arange(m_bits) < read_len, read[:m_bits], 4).astype(jnp.int8)
+
+    def eval_cand(sn):
+        bases, succ, s0 = _window(index, sn, win_len)
+        dists, store = bitalign_dc(bases, succ, pat, read_len, m_bits=m_bits, k=k)
+        best = jnp.argmin(dists)
+        return dists[best], best, s0, store, succ
+
+    d_all, n_all, s0_all, store_all, succ_all = jax.vmap(eval_cand)(start_nodes)
+    d_all = jnp.where(votes > 0, d_all, k + 1)
+    ci = jnp.argmin(d_all)
+    d = d_all[ci]
+    ops, n_ops, nodes, stuck = bitalign_tb(
+        store_all[ci], succ_all[ci], n_all[ci], jnp.minimum(d, k), read_len,
+        m_bits=m_bits, k=k,
+    )
+    failed = (d > k) | stuck
+    return {
+        "distance": jnp.where(failed, -1, d).astype(jnp.int32),
+        "node": (s0_all[ci] + n_all[ci]).astype(jnp.int32),
+        "ops": ops,
+        "n_ops": n_ops,
+        "path": jnp.where(nodes >= 0, nodes + s0_all[ci], -1),
+        "failed": failed,
+    }
+
+
+def map_batch(index: SeGraMIndex, reads: jnp.ndarray, read_lens: jnp.ndarray, **kw):
+    f = partial(map_read, index, **kw)
+    return jax.vmap(f)(reads, read_lens)

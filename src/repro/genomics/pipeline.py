@@ -1,0 +1,68 @@
+"""Sharded host→device input pipeline for read mapping.
+
+Design for 1000+ nodes (DESIGN.md §5): each host process owns a disjoint
+slice of the read stream (process_index striding), builds fixed-shape
+batches, and places them as globally-sharded arrays over the ("pod",
+"data") axes.  Batches are stateless work quanta: fault tolerance is a
+(batch cursor, results offset) checkpoint, and straggler mitigation is
+work-stealing over unclaimed batch ids (fault.py).  A double-buffered
+prefetch thread overlaps host encode with device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from .encode import batch_reads
+
+
+class ReadBatches:
+    """Deterministic batch iterator over a read list (host shard aware)."""
+
+    def __init__(self, reads, *, batch: int, cap: int, process_index: int = 0,
+                 process_count: int = 1, start_batch: int = 0):
+        self.reads = reads
+        self.batch = batch
+        self.cap = cap
+        self.pi = process_index
+        self.pc = process_count
+        self.start_batch = start_batch
+
+    def __iter__(self) -> Iterator[tuple[int, np.ndarray, np.ndarray]]:
+        n = len(self.reads)
+        ids = np.arange(self.pi, n, self.pc)
+        n_batches = -(-len(ids) // self.batch)
+        for b in range(self.start_batch, n_batches):
+            sel = ids[b * self.batch: (b + 1) * self.batch]
+            reads = [self.reads[i] for i in sel]
+            while len(reads) < self.batch:  # tail padding (masked by lens=0)
+                reads.append(np.zeros(0, np.int8))
+            arr, lens = batch_reads(reads, self.cap)
+            yield b, arr, lens
+
+
+class Prefetcher:
+    """Double-buffered background prefetch (host encode ∥ device compute)."""
+
+    def __init__(self, it, device_put=None, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.device_put = device_put or jax.device_put
+        self._t = threading.Thread(target=self._run, args=(it,), daemon=True)
+        self._t.start()
+
+    def _run(self, it):
+        for item in it:
+            b, arr, lens = item
+            self.q.put((b, self.device_put(arr), self.device_put(lens)))
+        self.q.put(None)
+
+    def __iter__(self):
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            yield item

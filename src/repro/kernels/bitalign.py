@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for BitAlign sequence-to-graph DC (paper §6.8.2).
+
+Same lane strategy as the GenASM-DC kernels: one (read × subgraph window)
+alignment per VPU lane, word-major bitvectors, sequential reverse-
+topological node scan with the hop-queue ring buffer carried in registers
+(the BitAlign PE's hopBits queue, Figure 6-8).  Emits per-node status rows
+(R-only storage, the §Perf #8 scheme generalized to graphs) and the
+per-node match distances.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.bitvector import NUM_CHARS, WORD_BITS
+from repro.core.segram.graph import HOP_LIMIT
+
+from .genasm_dc import _pm_table, _shl1_wm
+
+
+def _tail_mask_wm(p_lens: jnp.ndarray, m_bits: int, nw: int) -> jnp.ndarray:
+    """[nw, BT] uint32 tail masks (low (m_bits - p_len) bits cleared)."""
+    pad = (m_bits - p_lens).astype(jnp.int32)  # [BT]
+    out = []
+    for wd in range(nw):
+        bits_below = jnp.clip(pad - 32 * wd, 0, 32)
+        low = jnp.where(
+            bits_below >= 32,
+            jnp.uint32(0xFFFFFFFF),
+            (jnp.uint32(1) << bits_below.astype(jnp.uint32)) - jnp.uint32(1),
+        )
+        out.append(~low)
+    return jnp.stack(out)  # [nw, BT]
+
+
+def _bitalign_kernel(bases_ref, succ_ref, pattern_ref, plen_ref, dists_ref,
+                     r_ref, *, n: int, m_bits: int, k: int, nw: int):
+    bt = bases_ref.shape[0]
+    pm = _pm_table(pattern_ref[...], m_bits, nw)  # [5, nw, BT]
+    tail = _tail_mask_wm(plen_ref[...], m_bits, nw)  # [nw, BT]
+    tail_rows = jnp.broadcast_to(tail, (k + 1, nw, bt))
+    H = HOP_LIMIT
+
+    def step(s, hist):
+        # hist: [H, k+1, nw, BT]; hist[h] = R of node i+1+h
+        i = n - 1 - s
+        sb = succ_ref[:, i]  # [BT] uint32 hopBits
+        comb = tail_rows
+        for h in range(H):
+            hop_ok = ((sb >> jnp.uint32(h)) & 1).astype(bool)  # [BT]
+            comb = comb & jnp.where(hop_ok[None, None, :], hist[h], tail_rows)
+        # wait: AND with tail_rows when hop off is identity only if comb
+        # already ≤ tail; tail_rows has tail bits 0 → keeps invariant.
+        c = bases_ref[:, i].astype(jnp.int32)
+        cur_pm = jnp.zeros((nw, bt), jnp.uint32)
+        for ch in range(NUM_CHARS):
+            cur_pm = jnp.where((c == ch)[None, :], pm[ch], cur_pm)
+        R0 = _shl1_wm(comb[0]) | cur_pm
+        rows = [R0 & tail]
+        for d in range(1, k + 1):
+            D = comb[d - 1]
+            S = _shl1_wm(comb[d - 1])
+            I = _shl1_wm(rows[d - 1])
+            M = _shl1_wm(comb[d]) | cur_pm
+            rows.append(D & S & I & M & tail)
+        R = jnp.stack(rows)  # [k+1, nw, BT]
+        r_ref[:, i] = R.transpose(2, 0, 1)
+        msbs = (R[:, nw - 1, :] >> 31) & 1  # [k+1, BT]
+        found = msbs == 0
+        d_i = jnp.where(jnp.any(found, axis=0), jnp.argmax(found, axis=0),
+                        k + 1).astype(jnp.int32)
+        dists_ref[:, i] = d_i
+        new_hist = jnp.concatenate([R[None], hist[:-1]], axis=0)
+        return new_hist
+
+    hist0 = jnp.broadcast_to(tail_rows, (H, k + 1, nw, bt))
+    lax.fori_loop(0, n, step, hist0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_bits", "k", "block_bt", "interpret"))
+def bitalign_dc_batch(bases, succ_bits, patterns, p_lens, *, m_bits: int,
+                      k: int, block_bt: int = 32, interpret: bool = False):
+    """Batched BitAlign DC.
+
+    bases: [B, N] int8; succ_bits: [B, N] uint32; patterns: [B, m_bits]
+    int8 wildcard-padded; p_lens: [B] int32.
+    Returns (dists [B, N] int32, R [B, N, k+1, nw] uint32).
+    """
+    nw = m_bits // WORD_BITS
+    b, n = bases.shape
+    if b % block_bt != 0:
+        raise ValueError(f"batch {b} not a multiple of block_bt {block_bt}")
+    kernel = functools.partial(_bitalign_kernel, n=n, m_bits=m_bits, k=k, nw=nw)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_bt,),
+        in_specs=[
+            pl.BlockSpec((block_bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_bt, m_bits), lambda i: (i, 0)),
+            pl.BlockSpec((block_bt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_bt, n, k + 1, nw), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, n, k + 1, nw), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(bases, succ_bits, patterns, p_lens)

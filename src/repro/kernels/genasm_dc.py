@@ -1,0 +1,135 @@
+"""Pallas TPU kernel for GenASM-DC window batches.
+
+TPU adaptation of the paper's 64-PE bit-parallel DC systolic array
+(DESIGN.md §2): instead of unrolling the (i, d) anti-diagonals across PEs,
+the batch of independent window alignments is the vector axis — every VPU
+lane advances one alignment, sequentially in ``i`` (text chars) and with a
+*statically unrolled* ``d`` loop (the k+1 distance rows, k=24 default).
+
+Data layout inside the kernel is word-major ``[.., nw, BT]`` so the batch
+tile ``BT`` occupies the 128-wide lane dimension; bitvector words (nw=2
+for W=64) and distance rows live in sublanes/registers.  The per-window
+traceback store (the ASIC's TB-SRAM) is the kernel output, written once
+per text step — the same "24 B/cycle/PE" streaming locality the paper
+engineers, here expressed as one VMEM->HBM block stream per window tile.
+
+VMEM budget per block (BT=128, W=64, k=24): tb out 4.9 MB + text/pattern
+tiles 16 KB + PM scratch 5 KB + R carry 26 KB — well under 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.bitvector import NUM_CHARS, WORD_BITS
+
+DEFAULT_BT = 128
+
+
+def _shl1_wm(x: jnp.ndarray) -> jnp.ndarray:
+    """shift-left-1 for word-major [.., nw, BT] bitvectors."""
+    carry = x >> 31
+    shifted = x << 1
+    zeros = jnp.zeros(x.shape[:-2] + (1,) + x.shape[-1:], jnp.uint32)
+    incoming = jnp.concatenate([zeros, carry[..., :-1, :]], axis=-2)
+    return shifted | incoming
+
+
+def _pm_table(pattern_tile: jnp.ndarray, w: int, nw: int) -> jnp.ndarray:
+    """[NUM_CHARS, nw, BT] uint32 PM table from a [BT, w] int8 pattern tile."""
+    rev = pattern_tile[:, ::-1].astype(jnp.int32)  # [BT, w]; rev[:, g] = char at bit g
+    weights = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    out = []
+    for c in range(NUM_CHARS):
+        mismatch = ~((rev == c) | (rev == 4))
+        mm = mismatch.astype(jnp.uint32).reshape(rev.shape[0], nw, WORD_BITS)
+        pm = jnp.sum(mm * weights[None, None, :], axis=-1, dtype=jnp.uint32)  # [BT, nw]
+        out.append(pm.T)  # [nw, BT]
+    return jnp.stack(out)  # [5, nw, BT]
+
+
+def _dc_kernel(text_ref, pattern_ref, dmin_ref, tb_ref, *, w: int, k: int, nw: int):
+    bt = text_ref.shape[0]
+    pm = _pm_table(pattern_ref[...], w, nw)  # [5, nw, BT]
+    ones = jnp.full((k + 1, nw, bt), 0xFFFFFFFF, jnp.uint32)
+
+    def step(s, R_old):
+        i = w - 1 - s  # text position, scanned w-1 .. 0
+        c = text_ref[:, i].astype(jnp.int32)  # [BT]
+        cur_pm = jnp.zeros((nw, bt), jnp.uint32)
+        for ch in range(NUM_CHARS):
+            cur_pm = jnp.where((c == ch)[None, :], pm[ch], cur_pm)
+
+        R0 = _shl1_wm(R_old[0]) | cur_pm
+        new_rows = [R0]
+        stores = [jnp.stack([R0, ones[0], ones[0]])]  # d=0: (M=R0, I=1s, D=1s)
+        for d in range(1, k + 1):
+            D = R_old[d - 1]
+            S = _shl1_wm(R_old[d - 1])
+            I = _shl1_wm(new_rows[d - 1])
+            M = _shl1_wm(R_old[d]) | cur_pm
+            new_rows.append(D & S & I & M)
+            stores.append(jnp.stack([M, I, D]))
+        R_new = jnp.stack(new_rows)  # [k+1, nw, BT]
+        st = jnp.stack(stores)  # [k+1, 3, nw, BT]
+        tb_ref[:, i] = st.transpose(3, 0, 1, 2)  # [BT, k+1, 3, nw]
+        return R_new
+
+    R_fin = lax.fori_loop(0, w, step, ones)
+    msbs = (R_fin[:, nw - 1, :] >> 31) & 1  # [k+1, BT]
+    found = msbs == 0
+    dmin = jnp.where(
+        jnp.any(found, axis=0), jnp.argmax(found, axis=0), k + 1
+    ).astype(jnp.int32)
+    dmin_ref[...] = dmin
+
+
+@functools.partial(
+    jax.jit, static_argnames=("w", "k", "block_bt", "interpret")
+)
+def window_dc_batch(
+    sub_texts: jnp.ndarray,
+    sub_patterns: jnp.ndarray,
+    *,
+    w: int = 64,
+    k: int = 24,
+    block_bt: int = DEFAULT_BT,
+    interpret: bool = False,
+):
+    """Batched GenASM-DC windows via Pallas.
+
+    ``sub_texts``/``sub_patterns``: [B, w] int8 (B a multiple of
+    ``block_bt``; pad with sentinel windows).  Returns
+    ``(d_min [B] int32, tb [B, w, k+1, 3, nw] uint32)`` identical to
+    vmapped :func:`repro.core.genasm_dc.window_dc`.
+    """
+    if w % WORD_BITS != 0:
+        raise ValueError("w must be a multiple of 32")
+    nw = w // WORD_BITS
+    b = sub_texts.shape[0]
+    if b % block_bt != 0:
+        raise ValueError(f"batch {b} not a multiple of block_bt {block_bt}")
+
+    kernel = functools.partial(_dc_kernel, w=w, k=k, nw=nw)
+    grid = (b // block_bt,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_bt, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_bt, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_bt,), lambda i: (i,)),
+            pl.BlockSpec((block_bt, w, k + 1, 3, nw), lambda i: (i, 0, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, w, k + 1, 3, nw), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(sub_texts, sub_patterns)

@@ -1,0 +1,90 @@
+"""GenASM-DC kernel v2 — beyond-paper TB-store compression (§Perf #3).
+
+Hypothesis (napkin math): the paper's accelerator streams 3 intermediate
+bitvectors (M, I, D) per (i, d) cell to TB-SRAM — 24 B/cycle/PE; but all
+four TB checks are *derivable from the status bitvectors alone*:
+
+    D(i,d) = R(i+1, d-1)           S(i,d) = shl1(D) = shl1(R(i+1, d-1))
+    I(i,d) = shl1(R(i, d-1))       M(i,d) = shl1(R(i+1, d)) | PM[text[i]]
+
+so storing only ``R`` rows ([W+1, k+1, nw] incl. the i=W boundary = all
+ones) cuts TB-store writes and footprint by 3× (38.4 KB → 13 KB per
+window at k=24), at the cost of one extra indexed read (the i+1 row) and
+a PM re-derivation per TB step — TB executes ≤ W−O steps/window vs the
+DC's W·(k+1) writes, so trading DC-side bytes for TB-side gathers is a
+clear win (DC is the streaming bottleneck the paper engineered TB-SRAMs
+for).  Confirmed by measurement in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.bitvector import NUM_CHARS, WORD_BITS
+
+from .genasm_dc import _pm_table, _shl1_wm
+
+
+def _dc_kernel_v2(text_ref, pattern_ref, dmin_ref, r_ref, *, w: int, k: int,
+                  nw: int):
+    bt = text_ref.shape[0]
+    pm = _pm_table(pattern_ref[...], w, nw)  # [5, nw, BT]
+    ones = jnp.full((k + 1, nw, bt), 0xFFFFFFFF, jnp.uint32)
+    r_ref[:, w] = ones.transpose(2, 0, 1)  # boundary row (i = w)
+
+    def step(s, R_old):
+        i = w - 1 - s
+        c = text_ref[:, i].astype(jnp.int32)
+        cur_pm = jnp.zeros((nw, bt), jnp.uint32)
+        for ch in range(NUM_CHARS):
+            cur_pm = jnp.where((c == ch)[None, :], pm[ch], cur_pm)
+        R0 = _shl1_wm(R_old[0]) | cur_pm
+        rows = [R0]
+        for d in range(1, k + 1):
+            D = R_old[d - 1]
+            S = _shl1_wm(R_old[d - 1])
+            I = _shl1_wm(rows[d - 1])
+            M = _shl1_wm(R_old[d]) | cur_pm
+            rows.append(D & S & I & M)
+        R_new = jnp.stack(rows)  # [k+1, nw, BT]
+        r_ref[:, i] = R_new.transpose(2, 0, 1)
+        return R_new
+
+    R_fin = lax.fori_loop(0, w, step, ones)
+    msbs = (R_fin[:, nw - 1, :] >> 31) & 1
+    found = msbs == 0
+    dmin_ref[...] = jnp.where(
+        jnp.any(found, axis=0), jnp.argmax(found, axis=0), k + 1
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "k", "block_bt", "interpret"))
+def window_dc_batch_v2(sub_texts, sub_patterns, *, w: int = 64, k: int = 24,
+                       block_bt: int = 128, interpret: bool = False):
+    """Returns ``(d_min [B], R [B, w+1, k+1, nw])`` — status rows only."""
+    nw = w // WORD_BITS
+    b = sub_texts.shape[0]
+    if b % block_bt != 0:
+        raise ValueError(f"batch {b} not a multiple of block_bt {block_bt}")
+    kernel = functools.partial(_dc_kernel_v2, w=w, k=k, nw=nw)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_bt,),
+        in_specs=[
+            pl.BlockSpec((block_bt, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_bt, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_bt,), lambda i: (i,)),
+            pl.BlockSpec((block_bt, w + 1, k + 1, nw), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, w + 1, k + 1, nw), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(sub_texts, sub_patterns)

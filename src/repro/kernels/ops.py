@@ -1,0 +1,109 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced JAX ops, bit-for-bit matching the TPU
+lowering semantics.  On TPU backends the compiled kernels run natively.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import genasm_dc as _gdc
+from . import myers as _my
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def window_dc(sub_texts, sub_patterns, *, w: int = 64, k: int = 24, squeeze=False,
+              block_bt: int | None = None):
+    """GenASM-DC over a batch of windows (Pallas kernel, padded to tile).
+
+    ``sub_texts``/``sub_patterns``: [B, w] int8.  Returns
+    ``(d_min [B], tb [B, w, k+1, 3, nw])``; with ``squeeze=True`` drops a
+    leading singleton batch (used by the windowed aligner's scan body).
+    """
+    b = sub_texts.shape[0]
+    bt = block_bt or min(_gdc.DEFAULT_BT, max(8, b))
+    pad = (-b) % bt
+    if pad:
+        sub_texts = jnp.concatenate(
+            [sub_texts, jnp.full((pad, sub_texts.shape[1]), 4, sub_texts.dtype)]
+        )
+        sub_patterns = jnp.concatenate(
+            [sub_patterns, jnp.full((pad, sub_patterns.shape[1]), 4, sub_patterns.dtype)]
+        )
+    d, tb = _gdc.window_dc_batch(
+        sub_texts, sub_patterns, w=w, k=k, block_bt=bt, interpret=_interpret()
+    )
+    d, tb = d[:b], tb[:b]
+    if squeeze:
+        return d[0], tb[0]
+    return d, tb
+
+
+def myers_distance(texts, patterns, m_lens, *, m_bits: int, mode: str = "global",
+                   block_bt: int | None = None):
+    """Batched Myers edit distance (Pallas kernel, padded to tile)."""
+    b = texts.shape[0]
+    bt = block_bt or min(128, max(8, b))
+    pad = (-b) % bt
+    if pad:
+        texts = jnp.concatenate([texts, jnp.full((pad, texts.shape[1]), 4, texts.dtype)])
+        patterns = jnp.concatenate(
+            [patterns, jnp.full((pad, patterns.shape[1]), 4, patterns.dtype)]
+        )
+        m_lens = jnp.concatenate([m_lens, jnp.ones((pad,), m_lens.dtype)])
+    out = _my.myers_distance_batch(
+        texts, patterns, m_lens, m_bits=m_bits, mode=mode, block_bt=bt,
+        interpret=_interpret(),
+    )
+    return out[:b]
+
+
+def window_dc_v2(sub_texts, sub_patterns, *, w: int = 64, k: int = 24,
+                 squeeze=False, block_bt: int | None = None):
+    """v2 kernel: R-only TB store (3× smaller; see genasm_dc_v2)."""
+    from . import genasm_dc_v2 as _v2
+
+    b = sub_texts.shape[0]
+    bt = block_bt or min(_gdc.DEFAULT_BT, max(8, b))
+    pad = (-b) % bt
+    if pad:
+        sub_texts = jnp.concatenate(
+            [sub_texts, jnp.full((pad, sub_texts.shape[1]), 4, sub_texts.dtype)])
+        sub_patterns = jnp.concatenate(
+            [sub_patterns, jnp.full((pad, sub_patterns.shape[1]), 4,
+                                    sub_patterns.dtype)])
+    d, r = _v2.window_dc_batch_v2(sub_texts, sub_patterns, w=w, k=k,
+                                  block_bt=bt, interpret=_interpret())
+    d, r = d[:b], r[:b]
+    if squeeze:
+        return d[0], r[0]
+    return d, r
+
+
+def bitalign_dc(bases, succ_bits, patterns, p_lens, *, m_bits: int, k: int,
+                block_bt: int | None = None):
+    """Batched BitAlign DC kernel (padded to tile)."""
+    from . import bitalign as _ba
+
+    b = bases.shape[0]
+    bt = block_bt or min(32, max(8, b))
+    pad = (-b) % bt
+    if pad:
+        bases = jnp.concatenate([bases, jnp.full((pad, bases.shape[1]), 4,
+                                                 bases.dtype)])
+        succ_bits = jnp.concatenate(
+            [succ_bits, jnp.zeros((pad, succ_bits.shape[1]), succ_bits.dtype)])
+        patterns = jnp.concatenate(
+            [patterns, jnp.full((pad, patterns.shape[1]), 4, patterns.dtype)])
+        p_lens = jnp.concatenate([p_lens, jnp.ones((pad,), p_lens.dtype)])
+    d, r = _ba.bitalign_dc_batch(bases, succ_bits, patterns, p_lens,
+                                 m_bits=m_bits, k=k, block_bt=bt,
+                                 interpret=_interpret())
+    return d[:b], r[:b]

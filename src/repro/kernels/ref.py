@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import genasm_dc as _dc
+from repro.core import myers as _my
+
+
+@partial(jax.jit, static_argnames=("w", "k"))
+def window_dc_batch(sub_texts, sub_patterns, *, w: int = 64, k: int = 24):
+    """Reference for kernels.genasm_dc.window_dc_batch (vmapped core impl)."""
+    f = partial(_dc.window_dc, w=w, k=k)
+    return jax.vmap(f)(sub_texts, sub_patterns)
+
+
+@partial(jax.jit, static_argnames=("m_bits", "mode"))
+def myers_distance_batch(texts, patterns, m_lens, *, m_bits: int, mode: str = "global"):
+    """Reference for kernels.myers.myers_distance_batch."""
+    f = partial(_my.myers_distance, m_bits=m_bits, mode=mode)
+    return jax.vmap(f)(texts, patterns, m_lens)
+
+
+@partial(jax.jit, static_argnames=("w", "k"))
+def window_dc_batch_v2(sub_texts, sub_patterns, *, w: int = 64, k: int = 24):
+    """Reference for kernels.genasm_dc_v2 (vmapped core window_dc_r)."""
+    f = partial(_dc.window_dc_r, w=w, k=k)
+    return jax.vmap(f)(sub_texts, sub_patterns)
+
+
+@partial(jax.jit, static_argnames=("m_bits", "k"))
+def bitalign_dc_batch(bases, succ_bits, patterns, p_lens, *, m_bits: int, k: int):
+    """Reference for kernels.bitalign (vmapped core bitalign_dc; R rows only)."""
+    from repro.core.segram import bitalign as _ba
+
+    def one(b, s, p, pl_):
+        dists, store = _ba.bitalign_dc(b, s, p, pl_, m_bits=m_bits, k=k)
+        return dists, store[:, :, 0]  # R rows
+
+    return jax.vmap(one)(bases, succ_bits, patterns, p_lens)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell: ``jax.jit(step, in_shardings=…).lower(**input_specs)``
+``.compile()`` on the production meshes (16×16 single-pod, 2×16×16
+multi-pod), then record ``memory_analysis()``, ``cost_analysis()``, the
+parsed collective schedule, and the analytic roofline terms
+(EXPERIMENTS.md §Dry-run / §Roofline).
+
+Resumable: results accrue in ``dryrun_results.json``; rerun with
+``--skip-done`` after interruption.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, cells, get_config, get_shape
+from repro.dist import sharding as shd
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt_mod
+from repro.train import serve as serve_mod
+
+RESULTS = Path(__file__).resolve().parents[3] / "dryrun_results.json"
+
+
+def microbatches_for(cfg, shape) -> int:
+    """Gradient-accumulation depth: keep per-microbatch boundary activations
+    ~1 GB/device (DESIGN.md §5 memory plan)."""
+    if shape.kind != "train":
+        return 1
+    big = cfg.d_model >= 8192 or cfg.n_layers >= 90
+    return 8 if big else (4 if cfg.d_model >= 4096 else 2)
+
+
+def shardify(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, compile_: bool = True):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct = jax.eval_shape(
+        lambda k: model_zoo.init(cfg, k), key_struct)
+    pspecs = shd.param_specs(params_struct, mesh)
+    pshard = shardify(mesh, pspecs)
+    specs = model_zoo.input_specs(cfg, shape)
+    bshard = shardify(mesh, shd.batch_specs(specs["batch"], mesh))
+
+    with mesh:
+        if shape.kind == "train":
+            micro = microbatches_for(cfg, shape)
+            tcfg = train_loop.TrainConfig(
+                microbatches=micro,
+                sp=cfg.d_model >= 8192 or cfg.n_layers >= 90,
+            )
+            step = train_loop.build_train_step(cfg, tcfg, mesh)
+            opt_struct = jax.eval_shape(
+                partial(opt_mod.init, tcfg.adamw), params_struct)
+            ospecs = {
+                "step": P(),
+                "m": pspecs,
+                "v": pspecs,
+            }
+            oshard = shardify(mesh, ospecs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_struct, opt_struct, specs["batch"])
+            loop_trip = cfg.n_blocks * micro
+        elif shape.kind == "prefill":
+            step = serve_mod.build_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_struct, specs["batch"])
+            loop_trip = cfg.n_blocks
+        else:  # decode
+            step = serve_mod.build_decode_step(cfg)
+            sshard = shardify(mesh, shd.state_specs(specs["state"], mesh))
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, sshard, bshard, NamedSharding(mesh, P())),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_struct, specs["state"], specs["batch"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+            loop_trip = cfg.n_blocks
+
+        lower_s = time.time() - t0
+        rec = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": chips, "lower_s": round(lower_s, 1),
+        }
+        if not compile_:
+            return rec
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "per_device_total": int(
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops_per_device_raw": float(ca.get("flops", 0.0)),
+            "bytes_per_device_raw": float(ca.get("bytes accessed", 0.0)),
+        }
+        pod_size = 2 if multi_pod else 1
+        coll = rf.parse_collectives(compiled.as_text(), loop_trip=loop_trip,
+                                    pod_size=pod_size, n_devices=chips)
+        rec["collectives"] = {
+            "n_ops": coll["n_ops"],
+            "per_kind_bytes": {k: float(v) for k, v in coll["per_kind"].items()},
+            "link_bytes_corrected": float(coll["link_bytes"]),
+            "cross_pod_bytes": float(coll.get("cross_pod_bytes", 0.0)),
+            "intra_pod_bytes": float(coll.get("intra_pod_bytes", 0.0)),
+            "loop_trip_correction": loop_trip,
+        }
+
+        # analytic roofline (primary; see roofline.py docstring)
+        if shape.kind == "train":
+            an = rf.train_analytic(cfg, shape, chips,
+                                   microbatches=microbatches_for(cfg, shape))
+        else:
+            an = rf.serve_analytic(cfg, shape, chips,
+                                   prefill=shape.kind == "prefill")
+        t = rf.terms(an.flops, an.hbm_bytes, an.coll_bytes, chips)
+        rec["analytic"] = {
+            "flops_global": an.flops, "hbm_bytes_global": an.hbm_bytes,
+            "coll_bytes_global": an.coll_bytes, **t,
+            "model_flops_6nd": an.notes.get("model_flops_6nd", 0.0),
+            "useful_ratio_6nd": (
+                an.notes.get("model_flops_6nd", 0.0) / an.flops if an.flops else 0.0),
+            "params_total": an.notes.get("params_total", 0.0),
+        }
+        return rec
+
+
+def load_results() -> dict:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(res: dict):
+    RESULTS.write_text(json.dumps(res, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    res = load_results()
+    for arch in archs:
+        shapes = [args.shape] if args.shape else cells(arch)
+        for shape_name in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape_name}|{'2x16x16' if mp else '16x16'}"
+                if args.skip_done and key in res and "error" not in res[key]:
+                    print(f"skip {key}")
+                    continue
+                print(f"=== {key} ===", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mp,
+                                     compile_=not args.no_compile)
+                    print(json.dumps(
+                        {k: rec[k] for k in ("lower_s", "compile_s", "memory")
+                         if k in rec}), flush=True)
+                except Exception as e:  # record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print("ERROR:", rec["error"], flush=True)
+                res[key] = rec
+                save_results(res)
+    # summary
+    errs = [k for k, v in res.items() if "error" in v]
+    print(f"\n{len(res)} cells recorded, {len(errs)} errors")
+    for k in errs:
+        print("  FAIL:", k, res[k]["error"][:120])
+
+
+if __name__ == "__main__":
+    main()

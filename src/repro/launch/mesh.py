@@ -1,0 +1,30 @@
+"""Production mesh construction (assignment spec).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state.  Single pod:
+16×16 = 256 chips ("data", "model"); multi-pod: 2×16×16 = 512 chips
+("pod", "data", "model") — the "pod" axis is the cross-pod DCN/ICI axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel axes (batch + FSDP sharding)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes)

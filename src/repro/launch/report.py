@@ -1,0 +1,75 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.report > experiments_tables.md
+"""
+import json
+from pathlib import Path
+
+res = json.loads((Path(__file__).resolve().parents[3] / "dryrun_results.json").read_text())
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.1f}"
+
+
+def dryrun_table():
+    rows = ["| cell | mesh | chips | compile s | args GB/dev | temp GB/dev | "
+            "coll ops | HLO GF/dev (raw) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(res):
+        r = res[key]
+        if "error" in r:
+            rows.append(f"| {r['arch']}×{r['shape']} | {r['mesh']} | — | ERROR | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']}×{r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r.get('compile_s', 0):.0f} | {fmt_bytes(r['memory']['argument_bytes'])} | "
+            f"{fmt_bytes(r['memory']['temp_bytes'])} | "
+            f"{r['collectives']['n_ops']} | "
+            f"{r['cost']['flops_per_device_raw'] / 1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def roofline_table():
+    rows = ["| cell | mesh | compute s | memory s | collective s | bottleneck | "
+            "roofline s/step | MFU bound | useful ratio (6ND/HLO) |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(res):
+        r = res[key]
+        if "analytic" not in r:
+            continue
+        if r["mesh"] != "16x16":
+            continue  # roofline table is single-pod per the assignment
+        a = r["analytic"]
+        rows.append(
+            f"| {r['arch']}×{r['shape']} | {r['mesh']} | {a['compute_s']:.2e} | "
+            f"{a['memory_s']:.2e} | {a['collective_s']:.2e} | {a['bottleneck']} | "
+            f"{a['roofline_s']:.2e} | {a['mfu_bound']:.2f} | "
+            f"{a['useful_ratio_6nd']:.2f} |")
+    return "\n".join(rows)
+
+
+def multi_table():
+    rows = ["| cell | 16x16 temp GB | 2x16x16 temp GB | 2x16x16 coll ops | "
+            "2x16x16 link GB (corrected) |",
+            "|---|---|---|---|---|"]
+    singles = {k: v for k, v in res.items() if v.get("mesh") == "16x16"}
+    for key in sorted(singles):
+        r = singles[key]
+        mk = key.replace("16x16", "2x16x16")
+        m = res.get(mk)
+        if not m or "memory" not in m:
+            continue
+        rows.append(
+            f"| {r['arch']}×{r['shape']} | {fmt_bytes(r['memory']['temp_bytes'])} | "
+            f"{fmt_bytes(m['memory']['temp_bytes'])} | {m['collectives']['n_ops']} | "
+            f"{m['collectives']['link_bytes_corrected'] / 1e9:.0f} |")
+    return "\n".join(rows)
+
+
+print("## DRYRUN\n")
+print(dryrun_table())
+print("\n## ROOFLINE\n")
+print(roofline_table())
+print("\n## MULTI\n")
+print(multi_table())

@@ -1,0 +1,178 @@
+"""GQA attention: blockwise (flash-style) training/prefill + cached decode.
+
+Blockwise attention scans KV blocks with an online-softmax accumulator so
+the [S, S] score matrix is never materialized — required for 32k prefill
+to compile within HBM, and the natural TPU formulation (MXU does the
+[blk_q, d]×[d, blk_k] tiles; XLA fuses the rescale).  Supports causal
+masking, sliding windows (mixtral), logit softcap, and non-causal
+(encoder) mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, EMBED, HEADS, KV_HEADS, dense_init, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_init(cfg, key, d_model=None, cross=False):
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, hd)),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, hd)),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, hd)),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, d), in_axis=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+    return p
+
+
+ATTN_AXES = {
+    "wq": (EMBED, HEADS, None),
+    "wk": (EMBED, KV_HEADS, None),
+    "wv": (EMBED, KV_HEADS, None),
+    "wo": (HEADS, None, EMBED),
+    "bq": (HEADS, None),
+    "bk": (KV_HEADS, None),
+    "bv": (KV_HEADS, None),
+}
+
+
+def _qkv(cfg, p, x, positions, rope=True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        sliding_window: int | None = None,
+                        softcap: float | None = None,
+                        blk_q: int = 512):
+    """Chunked attention: q blocks × full KV, rematerialized per block.
+
+    The [S, S] score matrix never exists — each q block computes its
+    [blk_q, Sk] rows, softmaxes, and contracts with V; ``jax.checkpoint``
+    around the block makes the backward recompute those rows instead of
+    saving them (the flash-attention trade expressed at the XLA level —
+    the VJP of a hand-rolled online-softmax scan would otherwise stash
+    every KV-step carry, which is *worse* than S² memory).
+
+    q: [B, Sq, H, Dh]; k/v: [B, Sk, Hkv, Dh].  Returns [B, Sq, H, Dh].
+    """
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    # §Perf iteration #11 (two attempts, see EXPERIMENTS.md): padding sq up to
+    # a blk_q multiple was REFUTED (pad+slice copies cost more than ragged
+    # blocks: internvl2 prefill 53.3 → 68.7 GB).  Adopted: largest *divisor*
+    # of sq ≤ blk_q, preferring multiples of 128 (MXU-aligned lanes) — for
+    # the VLM's 33 024-long sequence this picks 384, not 258.
+    blk_q = min(blk_q, sq)
+    aligned = [d for d in range(blk_q, 127, -128) if sq % d == 0]
+    if aligned:
+        blk_q = aligned[0]
+    else:
+        while sq % blk_q:
+            blk_q -= 1
+    nq = sq // blk_q
+    scale = 1.0 / np.sqrt(dh)
+    qb = q.reshape(b, nq, blk_q, hkv, g, dh)
+    k_pos = jnp.arange(sk)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def q_block(qq, qp):
+        # qq: [B, blk_q, hkv, g, dh]; qp: [blk_q] positions
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qq, k).astype(jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((blk_q, sk), bool)
+        if causal:
+            mask &= qp[:, None] >= k_pos[None, :]
+        if sliding_window is not None:
+            mask &= qp[:, None] - k_pos[None, :] < sliding_window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return out  # [B, blk_q, hkv, g, dh]
+
+    q_pos = (q_offset + jnp.arange(sq)).reshape(nq, blk_q)
+    if nq == 1:
+        out = q_block(qb[:, 0], q_pos[0])[:, None]
+    else:
+        out = jax.lax.map(
+            lambda args: q_block(*args), (qb.swapaxes(0, 1), q_pos)
+        ).swapaxes(0, 1)  # [B, nq, blk_q, hkv, g, dh]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention(cfg, p, x, positions, *, causal=True, decode_cache=None):
+    """Full attention layer (projections + blockwise core)."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = blockwise_attention(
+        q, k, v, causal=causal, sliding_window=cfg.sliding_window,
+        softcap=cfg.attn_logit_softcap,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_attention(cfg, p, x, memory, mem_positions):
+    """Encoder-decoder cross attention (no rope on encoder memory)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(dt))
+    out = blockwise_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def decode_attention(cfg, p, x, cache_k, cache_v, cache_pos, cache_len):
+    """Single-token decode against a KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, S, Hkv, Dh]; cache_pos: [S] int32 the
+    absolute position stored in each cache slot (-1 = empty; ring layout
+    for sliding windows); cache_len: scalar current position.
+    Returns (out [B, 1, D], new_k [B, 1, Hkv, Dh], new_v).
+    """
+    dt = x.dtype
+    b, s, hkv, dh = cache_k.shape
+    pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))[:, None]
+    q, k, v = _qkv(cfg, p, x, pos)
+    h = cfg.n_heads
+    g = h // hkv
+    scale = 1.0 / np.sqrt(dh)
+    qh = q.reshape(b, hkv, g, dh)
+    valid = (cache_pos[None, :] >= 0) & (cache_pos[None, :] < pos)
+    if cfg.sliding_window is not None:
+        valid &= (pos - cache_pos[None, :]) <= cfg.sliding_window
+    sc = jnp.einsum("bhgd,bshd->bhgs", qh, cache_k).astype(jnp.float32) * scale
+    s_self = jnp.einsum("bhgd,bhd->bhg", qh, k[:, 0]).astype(jnp.float32) * scale
+    if cfg.attn_logit_softcap:
+        sc = cfg.attn_logit_softcap * jnp.tanh(sc / cfg.attn_logit_softcap)
+        s_self = cfg.attn_logit_softcap * jnp.tanh(s_self / cfg.attn_logit_softcap)
+    sc = jnp.where(valid[:, None, None], sc, NEG_INF)
+    full = jnp.concatenate([sc, s_self[..., None]], axis=-1)
+    w = jax.nn.softmax(full, axis=-1).astype(dt)
+    out = jnp.einsum("bhgs,bshd->bhgd", w[..., :-1], cache_v) + \
+        w[..., -1][..., None] * v[:, 0][:, :, None, :]
+    out = out.reshape(b, 1, h, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    return y, k, v

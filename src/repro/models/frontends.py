@@ -1,0 +1,22 @@
+"""Modality frontend STUBS (per assignment spec).
+
+``[audio]``/``[vlm]`` architectures specify the transformer backbone only;
+the frontend is a stub whose output embeddings arrive precomputed via
+``input_specs()``.  These helpers size those embeddings and synthesize
+random ones for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def frontend_embed_shape(cfg, batch: int, length: int | None = None):
+    fd = cfg.frontend_dim or cfg.d_model
+    return (batch, length if length is not None else cfg.frontend_len, fd)
+
+
+def synth_frontend_embeds(cfg, batch: int, length: int | None = None, seed: int = 0):
+    shape = frontend_embed_shape(cfg, batch, length)
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * 0.02

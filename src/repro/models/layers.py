@@ -1,0 +1,132 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+Params are plain pytrees (dicts of arrays); every param has a parallel
+*logical axis* annotation used by ``repro.dist.sharding`` to resolve
+PartitionSpecs.  Compute dtype is bf16, params fp32 (cast at use).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+# logical axis names (resolved to mesh axes in dist/sharding.py)
+EMBED, MLP, HEADS, KV_HEADS, QKV, VOCAB, EXPERT, CONV, STATE, NONE = (
+    "embed", "mlp", "heads", "kv_heads", "qkv", "vocab", "expert", "conv",
+    "state", None,
+)
+
+
+def dense_init(key, shape, in_axis=0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    scale = 1.0 / np.sqrt(fan_in)
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(cfg, key, d):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, Dh]; positions: [..., S] int32.  Half-rotation RoPE."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # [dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_init(cfg, key, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu_glu":
+        return {
+            "wi": dense_init(ks[0], (d, f)),
+            "wg": dense_init(ks[1], (d, f)),
+            "wo": dense_init(ks[2], (f, d)),
+        }
+    return {"wi": dense_init(ks[0], (d, f)), "wo": dense_init(ks[2], (f, d))}
+
+
+MLP_AXES = {
+    "wi": (EMBED, MLP),
+    "wg": (EMBED, MLP),
+    "wo": (MLP, EMBED),
+}
+
+
+def mlp_apply(cfg, p, x):
+    dt = x.dtype
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(dt)))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+    return h @ p["wo"].astype(dt)
+
+
+def embed_init(cfg, key):
+    return {"tokens": jax.random.normal(key, (cfg.padded_vocab, cfg.d_model)) * 0.02}
+
+
+def chunked_logits_xent(x, emb, targets, mask, *, chunk: int = 512):
+    """Cross-entropy against tied/untied vocab projection, seq-chunked.
+
+    Avoids materializing [B, S, V] logits: scans over sequence chunks,
+    computing logsumexp and the target logit per chunk in fp32.
+    ``x``: [B, S, D]; ``emb``: [V, D]; ``targets``/``mask``: [B, S].
+    """
+    b, s, d = x.shape
+    n_chunks = max(s // chunk, 1)
+    c = s // n_chunks
+    xs = x.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+    ts = targets.reshape(b, n_chunks, c).swapaxes(0, 1)
+    ms = mask.reshape(b, n_chunks, c).swapaxes(0, 1)
+    et = emb.astype(COMPUTE_DTYPE).T
+
+    def body(carry, inp):
+        xc, tc, mc = inp
+        logits = (xc @ et).astype(jnp.float32)  # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - tgt) * mc)
+        acc = jnp.sum((jnp.argmax(logits, -1) == tc) * mc)
+        return (carry[0] + loss, carry[1] + acc), None
+
+    (loss, acc), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xs, ts, ms))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return loss / denom, acc / denom

@@ -1,0 +1,163 @@
+"""Mamba (S6 selective scan) block for the Jamba hybrid architecture.
+
+Chunked scan: within a chunk the diagonal SSM recurrence runs as an
+associative scan (parallel, MXU-friendly cumulative products), and chunk
+boundary states are carried by an outer ``lax.scan`` — the same
+sequential-with-carry pattern as the GenASM-DC kernel grid.  Decode keeps
+(conv window, h state) per layer.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, EMBED, MLP, STATE, dense_init
+
+
+def mamba_init(cfg, key):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    ks = jax.random.split(key, 7)
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": jax.random.normal(ks[1], (mc.d_conv, di)) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * mc.d_state)),
+        "dt_proj": dense_init(ks[3], (dt_rank, di)),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, mc.d_state)
+        ).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+MAMBA_AXES = {
+    "in_proj": (EMBED, MLP),
+    "conv_w": (None, MLP),
+    "conv_b": (MLP,),
+    "x_proj": (MLP, None),
+    "dt_proj": (None, MLP),
+    "dt_bias": (MLP,),
+    "A_log": (MLP, None),
+    "D": (MLP,),
+    "out_proj": (MLP, EMBED),
+}
+
+
+def _ssm_chunked(u, dt, B, C, A, chunk: int):
+    """Diagonal SSM over time, chunked associative scan.
+
+    u/dt: [b, L, di]; B/C: [b, L, n]; A: [di, n].  Returns y [b, L, di].
+    """
+    b, L, di = u.shape
+    n = B.shape[-1]
+    nc = max(L // chunk, 1)
+    c = L // nc
+
+    # NOTE (perf iteration #1, EXPERIMENTS.md §Perf): dA/dBu are [b, c, di, n]
+    # per *chunk*, computed inside the scan body — materializing them for the
+    # full L up front is b·L·di·n·4 B (568 GB/device for jamba train_4k).
+    u_c = u.reshape(b, nc, c, di).swapaxes(0, 1)
+    dt_c = dt.reshape(b, nc, c, di).swapaxes(0, 1)
+    B_c = B.reshape(b, nc, c, n).swapaxes(0, 1)
+    C_c = C.reshape(b, nc, c, n).swapaxes(0, 1)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(h, inp):
+        uc, dtc, bc, cc = inp  # [b, c, di] ×2, [b, c, n] ×2 (bf16 storage)
+        uc, dtc = uc.astype(jnp.float32), dtc.astype(jnp.float32)
+        bc, cc = bc.astype(jnp.float32), cc.astype(jnp.float32)
+        da = jnp.exp(dtc[..., None] * A)  # [b, c, di, n]
+        dbu = (dtc * uc)[..., None] * bc[:, :, None, :]
+        a_acc, b_acc = jax.lax.associative_scan(assoc, (da, dbu), axis=1)
+        h_t = a_acc * h[:, None] + b_acc  # [b, c, di, n]
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cc)
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (u_c, dt_c, B_c, C_c))
+    return ys.swapaxes(0, 1).reshape(b, L, di)
+
+
+def mamba_apply(cfg, p, x):
+    """x: [B, L, D] -> [B, L, D]."""
+    mc = cfg.mamba
+    dt_ = x.dtype
+    b, L, d = x.shape
+    di = mc.expand * d
+    xz = x @ p["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)  # [B, L, di]
+
+    # depthwise causal conv1d
+    w = p["conv_w"].astype(dt_)
+    pad = jnp.zeros((b, mc.d_conv - 1, di), dt_)
+    xp = jnp.concatenate([pad, xs], axis=1)
+    conv = sum(
+        xp[:, i: i + L] * w[i] for i in range(mc.d_conv)
+    ) + p["conv_b"].astype(dt_)
+    xs = jax.nn.silu(conv)
+
+    proj = xs @ p["x_proj"].astype(dt_)
+    dt_rank = p["dt_proj"].shape[0]
+    dt_x, Bx, Cx = jnp.split(proj, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    delta = jax.nn.softplus(
+        dt_x @ p["dt_proj"].astype(dt_) + p["dt_bias"].astype(dt_)
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # [di, n]
+    # store scan inputs in bf16 (perf iteration #4: halves the full-L SSM
+    # input residency); the chunk body upcasts to f32 for the recurrence.
+    y = _ssm_chunked(xs.astype(jnp.bfloat16), delta.astype(jnp.bfloat16),
+                     Bx.astype(jnp.bfloat16), Cx.astype(jnp.bfloat16), A,
+                     mc.chunk)
+    y = (y + xs.astype(jnp.float32) * p["D"]).astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_)
+
+
+def mamba_decode_init(cfg, batch):
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), COMPUTE_DTYPE),
+        "h": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(cfg, p, x, state):
+    """Single-token decode.  x: [B, 1, D]."""
+    mc = cfg.mamba
+    dt_ = x.dtype
+    b = x.shape[0]
+    di = mc.expand * cfg.d_model
+    xz = x[:, 0] @ p["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xs[:, None]], axis=1)  # [B, d_conv, di]
+    w = p["conv_w"].astype(dt_)
+    conv = jnp.einsum("bkd,kd->bd", window, w) + p["conv_b"].astype(dt_)
+    xs = jax.nn.silu(conv)
+    proj = xs @ p["x_proj"].astype(dt_)
+    dt_rank = p["dt_proj"].shape[0]
+    dt_x, Bx, Cx = jnp.split(proj, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    delta = jax.nn.softplus(
+        dt_x @ p["dt_proj"].astype(dt_) + p["dt_bias"].astype(dt_)
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(delta[..., None] * A)  # [B, di, n]
+    h = dA * state["h"] + (delta * xs.astype(jnp.float32))[..., None] * \
+        Bx.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cx.astype(jnp.float32))
+    y = (y + xs.astype(jnp.float32) * p["D"]).astype(dt_) * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(dt_))[:, None]
+    return out, {"conv": window[:, 1:], "h": h}

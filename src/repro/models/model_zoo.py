@@ -1,0 +1,136 @@
+"""Config → model builder: init, loss, prefill, decode for every family.
+
+Families: decoder-only (dense/MoE/hybrid/SSM), encoder-decoder (seamless),
+VLM (prefix embeddings).  Used by the trainer, the server, the smoke
+tests, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, transformer
+from .frontends import frontend_embed_shape
+from .layers import COMPUTE_DTYPE, chunked_logits_xent
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.enc_layers > 0
+
+
+def init(cfg: ModelConfig, key):
+    if is_encdec(cfg):
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat: bool = True, mesh=None,
+            sp: bool = False):
+    """batch: dict(tokens, targets, mask [, frames | prefix_embeds])."""
+    if is_encdec(cfg):
+        hidden, aux = encdec.forward(cfg, params, batch["tokens"], batch["frames"],
+                                     remat=remat)
+    elif cfg.frontend == "vision_stub":
+        hidden, aux = transformer.forward(
+            cfg, params, batch["tokens"], prefix_embeds=batch["prefix_embeds"],
+            remat=remat, mesh=mesh, sp=sp)
+        hidden = hidden[:, batch["prefix_embeds"].shape[1]:]  # loss on text only
+    else:
+        hidden, aux = transformer.forward(cfg, params, batch["tokens"], remat=remat,
+                                          mesh=mesh, sp=sp)
+    emb = (params["embed"]["tokens"] if cfg.tie_embeddings
+           else params["lm_head"]["w"].T)
+    xent, acc = chunked_logits_xent(hidden, emb, batch["targets"], batch["mask"])
+    return xent + aux, {"xent": xent, "aux": aux, "acc": acc}
+
+
+def prefill_fn(cfg: ModelConfig, params, batch):
+    """Prefill: hidden-states forward; returns last-position logits."""
+    if is_encdec(cfg):
+        memory = encdec.encode(cfg, params, batch["frames"], remat=True)
+        hidden = encdec.decode(cfg, params, batch["tokens"], memory, remat=True)
+    elif cfg.frontend == "vision_stub":
+        hidden, _ = transformer.forward(cfg, params, batch["tokens"],
+                                        prefix_embeds=batch["prefix_embeds"])
+    else:
+        hidden, _ = transformer.forward(cfg, params, batch["tokens"])
+    return transformer.logits_head(cfg, params, hidden[:, -1:])[:, -1]
+
+
+def decode_state_init(cfg: ModelConfig, batch: int, max_len: int):
+    if is_encdec(cfg):
+        return encdec.decode_state_init(cfg, batch, max_len)
+    return transformer.decode_state_init(cfg, batch, max_len)
+
+
+def decode_fn(cfg: ModelConfig, params, state, batch, pos):
+    """One token for the whole batch against the decode state."""
+    if is_encdec(cfg):
+        return encdec.decode_step(cfg, params, state, batch["tokens"], pos,
+                                  batch["memory"])
+    return transformer.decode_step(cfg, params, state, batch["tokens"], pos)
+
+
+# --------------------------------------------------------------- batches ---
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, for_dryrun: bool = True
+                ) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape.
+
+    For ``decode`` shapes the KV/SSM state is part of the input specs (the
+    serve_step signature), per the assignment: decode lowers ``serve_step``
+    with a cache of ``seq_len``, not ``train_step``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    fd = cfg.frontend_dim or cfg.d_model
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": sd((B, S), jnp.int32),
+            "targets": sd((B, S), jnp.int32),
+            "mask": sd((B, S), jnp.float32),
+        }
+        if is_encdec(cfg):
+            specs["frames"] = sd((B, S, fd), jnp.float32)
+        elif cfg.frontend == "vision_stub":
+            specs["prefix_embeds"] = sd((B, cfg.frontend_len or 256, fd), jnp.float32)
+        return {"batch": specs}
+
+    if shape.kind == "prefill":
+        specs = {"tokens": sd((B, S), jnp.int32)}
+        if is_encdec(cfg):
+            specs["frames"] = sd((B, S, fd), jnp.float32)
+        elif cfg.frontend == "vision_stub":
+            specs["prefix_embeds"] = sd((B, cfg.frontend_len or 256, fd), jnp.float32)
+        return {"batch": specs}
+
+    # decode: one new token against a seq_len cache
+    state = jax.eval_shape(lambda: decode_state_init(cfg, B, S))
+    specs = {"tokens": sd((B, 1), jnp.int32)}
+    if is_encdec(cfg):
+        mem_len = cfg.frontend_len or 4096
+        specs["memory"] = sd((B, mem_len, cfg.d_model), COMPUTE_DTYPE)
+    return {"state": state, "batch": specs}
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def conc(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, cfg.vocab, size=s.shape), s.dtype)
+        return jnp.asarray(rng.normal(0, 0.02, size=s.shape), s.dtype)
+
+    out = jax.tree.map(conc, specs)
+    if "mask" in out.get("batch", {}):
+        out["batch"]["mask"] = jnp.ones_like(out["batch"]["mask"])
+    return out

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts MLP with capacity-based dispatch (EP over "model").
+
+Top-k routing in fp32, capacity factor token dropping, auxiliary
+load-balance loss (Switch-style).  Experts are sharded over the "model"
+axis (expert parallelism); the [tokens]→[experts, capacity] gather and
+its inverse lower to all_to_all under GSPMD when the token batch is
+data-sharded and the expert axis is model-sharded — the standard EP
+collective pattern (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, EMBED, EXPERT, MLP, dense_init
+
+
+def moe_init(cfg, key):
+    m = cfg.moe
+    e, d, f = m.n_experts, cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "wi": dense_init(ks[1], (e, d, f), in_axis=1),
+        "wg": dense_init(ks[2], (e, d, f), in_axis=1),
+        "wo": dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+    if cfg.act != "silu_glu":
+        del p["wg"]
+    return p
+
+
+MOE_AXES = {
+    "router": (EMBED, None),
+    "wi": (EXPERT, EMBED, MLP),
+    "wg": (EXPERT, EMBED, MLP),
+    "wo": (EXPERT, MLP, EMBED),
+}
+
+
+MOE_CHUNK_TOKENS = 16_384  # dispatch-group size (perf iteration #2, §Perf)
+
+
+def _constrain(x, mesh, want):
+    if mesh is None:
+        return x
+    from repro.dist.sharding import _fit
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _fit(mesh, x.shape, want)))
+
+
+def _moe_chunk(cfg, p, xt, mesh):
+    """Route + dispatch + expert-compute + combine for one token chunk.
+
+    xt: [T, D].  Returns ([T, D], aux scalar).  Dispatch buffers are
+    [E, cap, D] with E sharded over "model" (expert parallelism) — under
+    GSPMD the token gather/scatter becomes the EP all_to_all.
+    """
+    m = cfg.moe
+    t, d = xt.shape
+    e, k = m.n_experts, m.top_k
+    cap = max(int(np.ceil(t / e * m.capacity_factor * k)), k)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)  # [T, k]
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(tope, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = m.router_aux_coef * e * jnp.sum(me * ce)
+
+    flat_e = tope.reshape(-1)  # [T*k] expert ids, token-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [T*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)
+    keep = pos < cap
+
+    tok_id = jnp.repeat(jnp.arange(t), k)
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)  # drop -> OOB
+    disp = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].add(xt[tok_id])
+    disp = disp[:-1].reshape(e, cap, d)
+    disp = _constrain(disp, mesh, ("model", None, None))
+
+    dt = xt.dtype
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, p["wg"].astype(dt)))
+        h = h * jnp.einsum("ecd,edf->ecf", disp, p["wi"].astype(dt))
+    else:
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", disp, p["wi"].astype(dt))))
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))  # [E, cap, D]
+    eo = _constrain(eo, mesh, ("model", None, None))
+
+    eo_flat = jnp.concatenate([eo.reshape(e * cap, d), jnp.zeros((1, d), dt)])
+    gathered = eo_flat[slot]  # [T*k, D] (dropped -> zeros row)
+    w = (topw.reshape(-1) * keep).astype(dt)
+    out = jnp.zeros((t, d), dt).at[tok_id].add(gathered * w[:, None])
+    return out, aux
+
+
+def moe_apply(cfg, p, x, mesh=None):
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    Tokens are dispatched in fixed-size chunks through a rematerialized
+    ``lax.scan`` — the live dispatch set is [E, cap_chunk, D] instead of
+    the full batch's (perf iteration #2: 604 GB → bounded; §Perf).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    n_chunks = max(t // MOE_CHUNK_TOKENS, 1)
+    if t % n_chunks:
+        n_chunks = 1  # irregular sizes: single chunk (smoke tests)
+    if n_chunks == 1:
+        out, aux = _moe_chunk(cfg, p, xt, mesh)
+        return out.reshape(b, s, d), aux
+
+    xc = xt.reshape(n_chunks, t // n_chunks, d)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(acc, xchunk):
+        out, aux = _moe_chunk(cfg, p, xchunk, mesh)
+        return acc + aux, out
+
+    aux, outs = jax.lax.scan(body, jnp.float32(0), xc)
+    return outs.reshape(b, s, d), aux / n_chunks

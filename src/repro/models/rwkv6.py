@@ -1,0 +1,169 @@
+"""RWKV-6 "Finch" time-mix with data-dependent decay (arXiv:2404.05892).
+
+The WKV state is a per-head [dh, dh] matrix updated with a per-channel,
+*data-dependent* decay — a linear scan with compact carried state, run
+chunk-sequentially like the Mamba block.  Channel-mix is the RWKV gated
+MLP.  Attention-free: decode carries (last-token shift, WKV state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, EMBED, HEADS, MLP, dense_init
+
+LORA_R = 64
+
+
+def rwkv_init(cfg, key):
+    d = cfg.d_model
+    h = cfg.n_heads if cfg.n_heads > 0 else d // 64
+    dh = d // h
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),  # token-shift mixes (r,k,v,w,g)
+        "wr": dense_init(ks[0], (d, d)),
+        "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)),
+        "wg": dense_init(ks[3], (d, d)),
+        "wo": dense_init(ks[4], (d, d)),
+        "w0": jnp.full((d,), -6.0, jnp.float32),  # decay bias
+        "w_lora_a": dense_init(ks[5], (d, LORA_R)),
+        "w_lora_b": dense_init(ks[6], (LORA_R, d)) * 0.1,
+        "u": jnp.zeros((h, dh), jnp.float32),  # bonus (first-occurrence) term
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+RWKV_AXES = {
+    "mu": (None, EMBED),
+    "wr": (EMBED, MLP), "wk": (EMBED, MLP), "wv": (EMBED, MLP),
+    "wg": (EMBED, MLP), "wo": (MLP, EMBED),
+    "w0": (EMBED,), "w_lora_a": (EMBED, None), "w_lora_b": (None, EMBED),
+    "u": (HEADS, None), "ln_x": (EMBED,),
+}
+
+
+def _time_shift(x, last=None):
+    """x: [B, L, D] -> previous-token x (zeros or `last` at position 0)."""
+    b, L, d = x.shape
+    first = jnp.zeros((b, 1, d), x.dtype) if last is None else last[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int):
+    """WKV linear attention with per-step decay.
+
+    r/k/v: [B, L, H, dh]; w: [B, L, H, dh] decay in (0, 1); u: [H, dh].
+    state S: [B, H, dh(k), dh(v)];  y_t = r_t · (S + u∘k_t ⊗ v_t);
+    S ← diag(w_t) S + k_t ⊗ v_t.   Chunk-sequential outer scan.
+    """
+    b, L, h, dh = r.shape
+    nc = max(L // chunk, 1)
+    c = L // nc
+
+    def chunk_step(S, inp):
+        rc, kc, vc, wc = inp  # [b, c, h, dh]
+        # within-chunk: sequential scan (c small); exact semantics
+        def t_step(S_, x):
+            r_, k_, v_, w_ = x  # [b, h, dh]
+            y = jnp.einsum("bhk,bhkv->bhv", r_, S_) + \
+                jnp.einsum("bhk,bhk,bhv->bhv", r_, u[None], v_)
+            S_new = S_ * w_[..., None] + k_[..., None] * v_[:, :, None, :]
+            return S_new, y
+
+        S, ys = jax.lax.scan(
+            t_step, S,
+            (rc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             wc.swapaxes(0, 1)),
+        )
+        return S, ys.swapaxes(0, 1)  # [b, c, h, dh]
+
+    rc = r.reshape(b, nc, c, h, dh).swapaxes(0, 1)
+    kc = k.reshape(b, nc, c, h, dh).swapaxes(0, 1)
+    vc = v.reshape(b, nc, c, h, dh).swapaxes(0, 1)
+    wc = w.reshape(b, nc, c, h, dh).swapaxes(0, 1)
+    S0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    S, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    return ys.swapaxes(0, 1).reshape(b, L, h, dh), S
+
+
+def rwkv_apply(cfg, p, x, *, state=None, return_state=False):
+    """Time-mix block.  x: [B, L, D]."""
+    dt_ = x.dtype
+    b, L, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    last = None if state is None else state["shift"]
+    xprev = _time_shift(x, last)
+    mu = p["mu"].astype(dt_)
+    mix = lambda i: x * mu[i] + xprev * (1 - mu[i])
+    r = (mix(0) @ p["wr"].astype(dt_)).reshape(b, L, h, dh).astype(jnp.float32)
+    k = (mix(1) @ p["wk"].astype(dt_)).reshape(b, L, h, dh).astype(jnp.float32)
+    v = (mix(2) @ p["wv"].astype(dt_)).reshape(b, L, h, dh).astype(jnp.float32)
+    # data-dependent decay (the Finch contribution)
+    wx = mix(3).astype(jnp.float32)
+    dd = jnp.tanh(wx @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + dd)).reshape(b, L, h, dh)
+    g = jax.nn.silu(mix(4) @ p["wg"].astype(dt_))
+
+    if state is None:
+        y, S = _wkv_chunked(r, k, v, w, p["u"], chunk=min(cfg.mamba.chunk if cfg.mamba
+                                                          else 128, L))
+    else:
+        S0 = state["wkv"]
+        y0 = jnp.einsum("blhk,bhkv->blhv", r, S0) + \
+            jnp.einsum("blhk,hk,blhv->blhv", r, p["u"], v)
+        S = S0 * w[:, 0][..., None] + k[:, 0][..., None] * v[:, 0][:, :, None, :]
+        y = y0
+    y = y.reshape(b, L, d).astype(dt_)
+    # group norm over heads (ln_x)
+    yh = y.reshape(b, L, h, dh).astype(jnp.float32)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(b, L, d) * p["ln_x"]).astype(dt_) * g
+    out = y @ p["wo"].astype(dt_)
+    if return_state:
+        return out, {"shift": x[:, -1], "wkv": S}
+    return out
+
+
+def rwkv_channel_mix_init(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jnp.full((2, d), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], (d, f)),
+        "wv": dense_init(ks[1], (f, d)),
+        "wr": dense_init(ks[2], (d, d)),
+    }
+
+
+RWKV_CM_AXES = {"mu": (None, EMBED), "wk": (EMBED, MLP), "wv": (MLP, EMBED),
+                "wr": (EMBED, MLP)}
+
+
+def rwkv_channel_mix(cfg, p, x, *, state=None, return_state=False):
+    dt_ = x.dtype
+    last = None if state is None else state["shift"]
+    xprev = _time_shift(x, last)
+    mu = p["mu"].astype(dt_)
+    xk = x * mu[0] + xprev * (1 - mu[0])
+    xr = x * mu[1] + xprev * (1 - mu[1])
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt_)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt_)) * (kk @ p["wv"].astype(dt_))
+    if return_state:
+        return out, {"shift": x[:, -1]}
+    return out
+
+
+def rwkv_decode_init(cfg, batch):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "tm": {"shift": jnp.zeros((batch, d), COMPUTE_DTYPE),
+               "wkv": jnp.zeros((batch, h, dh, dh), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, d), COMPUTE_DTYPE)},
+    }

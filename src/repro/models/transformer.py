@@ -1,0 +1,270 @@
+"""Decoder-only LM assembled from a ModelConfig.
+
+Layers are grouped into the config's repeating *pattern* (e.g. Jamba's
+[mamba×4, attn, mamba×3]); parameters are stacked over pattern groups and
+executed with ``lax.scan`` + remat — compact HLO for 96-layer models and
+layer-boundary activation checkpointing for the memory plan (DESIGN.md §5).
+
+Three entry points: ``forward`` (train/prefill hidden states), ``prefill``
+(hidden states + per-layer decode state), ``decode_step`` (one token).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mb
+from . import moe as moe_mod
+from . import rwkv6 as rk
+from .layers import (COMPUTE_DTYPE, EMBED, VOCAB, apply_norm, dense_init,
+                     embed_init, make_norm, mlp_apply, mlp_init)
+
+
+def _slot_init(cfg, key, slot: int, kind: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": make_norm(cfg, k1, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = attn.attn_init(cfg, k2)
+    elif kind == "mamba":
+        p["mamba"] = mb.mamba_init(cfg, k2)
+    elif kind == "rwkv":
+        p["rwkv"] = rk.rwkv_init(cfg, k2)
+    p["norm2"] = make_norm(cfg, k3, cfg.d_model)
+    if kind == "rwkv":
+        p["cmix"] = rk.rwkv_channel_mix_init(cfg, k4)
+    elif slot in cfg.moe_slots:
+        p["moe"] = moe_mod.moe_init(cfg, k4)
+    else:
+        p["mlp"] = mlp_init(cfg, k4)
+    return p
+
+
+def init_block(cfg, key):
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"slot{i}": _slot_init(cfg, keys[i], i, kind)
+        for i, kind in enumerate(cfg.pattern)
+    }
+
+
+def init_params(cfg, key):
+    kb, ke, kn, kh = jax.random.split(key, 4)
+    bkeys = jax.random.split(kb, cfg.n_blocks)
+    blocks = jax.vmap(lambda k: init_block(cfg, k))(bkeys)
+    params = {
+        "blocks": blocks,
+        "embed": embed_init(cfg, ke),
+        "final_norm": make_norm(cfg, kn, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(kh, (cfg.d_model, cfg.padded_vocab))}
+    if cfg.frontend != "none":
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = {"w": dense_init(kh, (fd, cfg.d_model))}
+    return params
+
+
+def _slot_apply(cfg, p, x, positions, slot: int, kind: str, aux_acc, mesh=None):
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind == "attn":
+        a = attn.attention(cfg, p["attn"], h, positions)
+    elif kind == "mamba":
+        a = mb.mamba_apply(cfg, p["mamba"], h)
+    else:
+        a = rk.rwkv_apply(cfg, p["rwkv"], h)
+    if cfg.parallel_block:
+        # command-r style: MLP on the same normed input, single residual add
+        if kind == "rwkv":
+            m = rk.rwkv_channel_mix(cfg, p["cmix"], h)
+        elif "moe" in p:
+            m, aux = moe_mod.moe_apply(cfg, p["moe"], h, mesh)
+            aux_acc = aux_acc + aux
+        else:
+            m = mlp_apply(cfg, p["mlp"], h)
+        return x + a + m, aux_acc
+    x = x + a
+    h2 = apply_norm(cfg, p["norm2"], x)
+    if kind == "rwkv":
+        m = rk.rwkv_channel_mix(cfg, p["cmix"], h2)
+    elif "moe" in p:
+        m, aux = moe_mod.moe_apply(cfg, p["moe"], h2, mesh)
+        aux_acc = aux_acc + aux
+    else:
+        m = mlp_apply(cfg, p["mlp"], h2)
+    return x + m, aux_acc
+
+
+NESTED_SLOT_REMAT = False  # §Perf iteration #4: hypothesis REFUTED — nested
+# per-slot checkpoints inside the block scan *increased* jamba train_4k temp
+# memory 63→72.6 GB/device (the slot-boundary saves stack up against the
+# block-level recompute buffers); kept as an opt-in knob for reference.
+
+
+def block_apply(cfg, bp, x, positions, mesh=None):
+    aux = jnp.float32(0)
+    nested = NESTED_SLOT_REMAT and len(cfg.pattern) > 1
+    for i, kind in enumerate(cfg.pattern):
+        fn = partial(_slot_apply, cfg, bp[f"slot{i}"], slot=i, kind=kind,
+                     mesh=mesh)
+        apply = lambda xx, aa: fn(xx, positions, aux_acc=aa)
+        if nested:
+            apply = jax.checkpoint(apply, prevent_cse=False)
+        x, aux = apply(x, aux)
+    return x, aux
+
+
+@partial(jax.jit, static_argnames=("cfg", "remat", "mesh", "sp"))
+def forward(cfg, params, tokens, *, prefix_embeds=None, remat: bool = True,
+            mesh=None, sp: bool = False):
+    """tokens: [B, S] int32 -> hidden [B, S(+P), D], aux loss.
+
+    ``mesh``/``sp``: when set, the residual stream at every layer boundary
+    is sharding-constrained (batch over dp; with ``sp`` the *sequence* over
+    "model" — sequence parallelism, which is what bounds the remat storage
+    of 96-layer models to ~1 GB/device; DESIGN.md §5).
+    """
+    from repro.dist.sharding import constrain_activations
+
+    x = params["embed"]["tokens"].astype(COMPUTE_DTYPE)[tokens]
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(COMPUTE_DTYPE) @ params["frontend_proj"]["w"].astype(
+            COMPUTE_DTYPE)
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, bp):
+        carry = constrain_activations(carry, mesh, seq_axis=sp)
+        y, aux = block_apply(cfg, bp, carry, positions, mesh)
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.sum(auxs)
+
+
+def logits_head(cfg, params, x):
+    w = (params["embed"]["tokens"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- decode ---
+
+KV_INT8 = False  # §Perf iteration #12: int8 KV cache (per-position/head
+# symmetric scales) — halves the decode memory term, the dominant roofline
+# term of every decode_32k/long_500k cell.  Measured in EXPERIMENTS.md §Perf.
+
+
+def decode_state_init(cfg, batch: int, max_len: int):
+    """Per-block per-slot decode state, stacked over blocks."""
+    def one_slot(kind):
+        if kind == "attn":
+            s = max_len if cfg.sliding_window is None else min(
+                max_len, cfg.sliding_window)
+            if KV_INT8:
+                return {
+                    "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                    "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                    "k_scale": jnp.zeros((batch, s, cfg.n_kv_heads), jnp.bfloat16),
+                    "v_scale": jnp.zeros((batch, s, cfg.n_kv_heads), jnp.bfloat16),
+                    "pos": jnp.full((s,), -1, jnp.int32),
+                }
+            return {
+                "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), COMPUTE_DTYPE),
+                "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), COMPUTE_DTYPE),
+                "pos": jnp.full((s,), -1, jnp.int32),
+            }
+        if kind == "mamba":
+            return mb.mamba_decode_init(cfg, batch)
+        return rk.rwkv_decode_init(cfg, batch)
+
+    block = {f"slot{i}": one_slot(kind) for i, kind in enumerate(cfg.pattern)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_blocks,) + a.shape).copy(), block
+    )
+
+
+def _slot_decode(cfg, p, st, x, pos, kind):
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind == "attn":
+        s_max = st["k"].shape[1]
+        write = jnp.minimum(pos, s_max - 1)
+        if cfg.sliding_window is not None:
+            write = pos % s_max  # ring layout; cache "pos" keeps absolutes
+        if "k_scale" in st:  # int8 KV cache (§Perf #12)
+            ck = st["k"].astype(COMPUTE_DTYPE) * st["k_scale"][..., None]
+            cv = st["v"].astype(COMPUTE_DTYPE) * st["v_scale"][..., None]
+        else:
+            ck, cv = st["k"], st["v"]
+        a, k_new, v_new = attn.decode_attention(cfg, p["attn"], h, ck, cv,
+                                                st["pos"], pos)
+        if "k_scale" in st:
+            def quant(x):  # [B, 1, Hkv, dh] -> int8 + per-head scale
+                s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+                s = jnp.maximum(s, 1e-8)
+                q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                             -127, 127).astype(jnp.int8)
+                return q, s.astype(jnp.bfloat16)
+            kq, ks = quant(k_new)
+            vq, vs = quant(v_new)
+            st = {
+                "k": jax.lax.dynamic_update_slice(st["k"], kq, (0, write, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(st["v"], vq, (0, write, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    st["k_scale"], ks, (0, write, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    st["v_scale"], vs, (0, write, 0)),
+                "pos": jax.lax.dynamic_update_slice(
+                    st["pos"], jnp.asarray(pos, jnp.int32)[None], (write,)),
+            }
+        else:
+            st = {
+                "k": jax.lax.dynamic_update_slice(st["k"], k_new, (0, write, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(st["v"], v_new, (0, write, 0, 0)),
+                "pos": jax.lax.dynamic_update_slice(
+                    st["pos"], jnp.asarray(pos, jnp.int32)[None], (write,)),
+            }
+    elif kind == "mamba":
+        a, st = mb.mamba_decode(cfg, p["mamba"], h, st)
+    else:
+        a, tm = rk.rwkv_apply(cfg, p["rwkv"], h, state=st["tm"], return_state=True)
+        st = {"tm": tm, "cm": st["cm"]}
+    x = x + a
+    h2 = apply_norm(cfg, p["norm2"], x)
+    if kind == "rwkv":
+        m, cm = rk.rwkv_channel_mix(cfg, p["cmix"], h2, state=st["cm"],
+                                    return_state=True)
+        st = {"tm": st["tm"], "cm": cm}
+    elif "moe" in p:
+        m, _ = moe_mod.moe_apply(cfg, p["moe"], h2)
+    else:
+        m = mlp_apply(cfg, p["mlp"], h2)
+    return x + m, st
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def decode_step(cfg, params, state, tokens, pos):
+    """One decode step.  tokens: [B, 1] int32; pos: scalar cache length.
+
+    Returns (logits [B, vocab] fp32, new_state).
+    """
+    x = params["embed"]["tokens"].astype(COMPUTE_DTYPE)[tokens]
+
+    def body(carry, scanned):
+        bp, st = scanned
+        y = carry
+        new_st = {}
+        for i, kind in enumerate(cfg.pattern):
+            y, new_st[f"slot{i}"] = _slot_decode(
+                cfg, bp[f"slot{i}"], st[f"slot{i}"], y, pos, kind)
+        return y, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return logits_head(cfg, params, x)[:, -1], new_state

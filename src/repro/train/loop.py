@@ -1,0 +1,77 @@
+"""Train-step builder: microbatch accumulation + remat + AdamW + sharding.
+
+The returned ``train_step(params, opt_state, batch)`` is what the
+multi-pod dry-run lowers and what ``launch/train.py`` runs: gradients are
+accumulated over ``microbatches`` sequential slices of the global batch
+(a ``lax.scan``), each slice forward/backward under layer remat, then one
+optimizer step.  Donation on (params, opt_state) makes the update
+in-place in HBM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from . import optimizer as opt_mod
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    adamw: opt_mod.AdamWConfig = opt_mod.AdamWConfig()
+    sp: bool = False  # sequence-parallel activation constraints
+
+
+def _split_micro(batch, n: int):
+    """[B, ...] -> [n, B/n, ...] per leaf."""
+    return jax.tree.map(
+        lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch
+    )
+
+
+def build_train_step(cfg, tcfg: TrainConfig, mesh=None):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``."""
+
+    def loss_of(params, mb):
+        loss, metrics = model_zoo.loss_fn(cfg, params, mb, mesh=mesh, sp=tcfg.sp)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        n = tcfg.microbatches
+        if n > 1:
+            micro = _split_micro(batch, n)
+
+            def acc(carry, mb):
+                gacc, lacc, aacc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (gacc, lacc + loss, aacc + metrics["acc"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, acc_m), _ = jax.lax.scan(
+                acc, (g0, jnp.float32(0), jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            acc_m = acc_m / n
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            acc_m = metrics["acc"]
+
+        new_params, new_opt, om = opt_mod.apply(tcfg.adamw, params, opt_state, grads)
+        metrics = {"loss": loss, "acc": acc_m, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_state(cfg, tcfg: TrainConfig, key):
+    params = model_zoo.init(cfg, key)
+    opt_state = opt_mod.init(tcfg.adamw, params)
+    return params, opt_state

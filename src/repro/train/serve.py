@@ -1,0 +1,44 @@
+"""Serving-step builders: prefill and decode with sharded caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+
+
+def build_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return model_zoo.prefill_fn(cfg, params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(cfg):
+    def decode_step(params, state, batch, pos):
+        return model_zoo.decode_fn(cfg, params, state, batch, pos)
+
+    return decode_step
+
+
+def greedy_generate(cfg, params, prompt_tokens, *, steps: int, max_len: int):
+    """Small-model greedy decoding used by examples/tests (CPU scale)."""
+    b, s0 = prompt_tokens.shape
+    state = model_zoo.decode_state_init(cfg, b, max_len)
+    tok = prompt_tokens[:, :1]
+    out = [tok]
+    pos = 0
+    # feed prompt then generate
+    for i in range(s0 - 1):
+        _, state = model_zoo.decode_fn(cfg, params, state,
+                                       {"tokens": prompt_tokens[:, i: i + 1]},
+                                       jnp.int32(pos))
+        pos += 1
+    tok = prompt_tokens[:, s0 - 1: s0]
+    for _ in range(steps):
+        logits, state = model_zoo.decode_fn(cfg, params, state, {"tokens": tok},
+                                            jnp.int32(pos))
+        pos += 1
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

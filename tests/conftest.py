@@ -1,0 +1,21 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def mutate_seq(seq, n_sub, n_ins, n_del, rng):
+    s = list(seq)
+    for _ in range(n_sub):
+        i = rng.integers(0, len(s))
+        s[i] = (s[i] + rng.integers(1, 4)) % 4
+    for _ in range(n_ins):
+        i = rng.integers(0, len(s) + 1)
+        s.insert(i, int(rng.integers(0, 4)))
+    for _ in range(n_del):
+        i = rng.integers(0, len(s))
+        del s[i]
+    return np.array(s, np.int8)

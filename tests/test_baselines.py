@@ -1,0 +1,54 @@
+"""Myers/DP baselines vs oracles (the paper's comparison kernels)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp_baseline, myers, oracle
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_myers_global_matches_levenshtein(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    m = data.draw(st.integers(3, 60))
+    n = data.draw(st.integers(3, 90))
+    a = rng.integers(0, 4, size=m).astype(np.int8)
+    b = rng.integers(0, 4, size=n).astype(np.int8)
+    pbuf = np.full((64,), 4, np.int8)
+    pbuf[:m] = a
+    got = int(myers.myers_distance(jnp.asarray(b), jnp.asarray(pbuf),
+                                   jnp.int32(m), m_bits=64, mode="global"))
+    assert got == oracle.levenshtein(a, b)
+
+
+def test_nw_edit_distance_matches_oracle(rng):
+    for _ in range(8):
+        m = int(rng.integers(5, 60))
+        n = int(rng.integers(m, 100))
+        a = rng.integers(0, 4, size=m).astype(np.int8)
+        b = rng.integers(0, 4, size=n).astype(np.int8)
+        pbuf = np.zeros((64,), np.int8); pbuf[:m] = a
+        tbuf = np.zeros((128,), np.int8); tbuf[:n] = b
+        got = int(dp_baseline.nw_edit_distance(jnp.asarray(tbuf), jnp.asarray(pbuf),
+                                               jnp.int32(m), jnp.int32(n)))
+        assert got == oracle.levenshtein_prefix(a, b)
+
+
+def test_affine_score_identity(rng):
+    a = rng.integers(0, 4, size=64).astype(np.int8)
+    t = np.concatenate([a, np.zeros(32, np.int8)])
+    p = np.concatenate([a, np.zeros(16, np.int8)])
+    s = int(dp_baseline.affine_align_score(jnp.asarray(t), jnp.asarray(p),
+                                           jnp.int32(64), jnp.int32(64)))
+    assert s == 64 * 2
+
+
+def test_affine_score_penalizes_gap(rng):
+    a = rng.integers(0, 4, size=50).astype(np.int8)
+    b = np.concatenate([a[:25], a[27:]])  # 2-deletion
+    t = np.concatenate([a, np.zeros(30, np.int8)])
+    p = np.concatenate([b, np.zeros(32, np.int8)])
+    s = int(dp_baseline.affine_align_score(jnp.asarray(t), jnp.asarray(p),
+                                           jnp.int32(48), jnp.int32(52)))
+    assert s == 48 * 2 - (4 + 2 * 2)  # matches minus open+2·extend

@@ -1,0 +1,66 @@
+"""Use case 3 (edit distance) + TB scoring configs + optimizer sanity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import oracle
+from repro.core.edit_distance import bitap_distance, genasm_distance
+from repro.core.genasm import GenASMConfig
+from repro.core.genasm_tb import cigar_counts, cigar_score
+from repro.train import optimizer as opt_mod
+
+from conftest import mutate_seq
+
+
+def test_genasm_distance_windowed(rng):
+    for _ in range(6):
+        m = int(rng.integers(100, 300))
+        a = rng.integers(0, 4, size=m).astype(np.int8)
+        b = mutate_seq(a, 4, 2, 2, rng)
+        abuf = np.full((320,), 4, np.int8); abuf[: len(a)] = a
+        bbuf = np.full((448,), 4, np.int8); bbuf[: len(b)] = b
+        d = int(genasm_distance(jnp.asarray(abuf), jnp.asarray(bbuf),
+                                jnp.int32(len(b)), jnp.int32(len(a)),
+                                p_cap=448))
+        want = oracle.levenshtein_prefix(b, a)
+        assert want <= d <= want + 3
+
+
+def test_bitap_distance_short(rng):
+    a = rng.integers(0, 4, size=40).astype(np.int8)
+    b = mutate_seq(a, 2, 1, 0, rng)
+    abuf = np.full((64,), 4, np.int8); abuf[: len(b)] = b
+    bbuf = np.full((128,), 4, np.int8); bbuf[: len(a)] = a
+    d = int(bitap_distance(jnp.asarray(abuf), jnp.asarray(bbuf), m_bits=64, k=10))
+    assert d == min(oracle.levenshtein_prefix(b, a), 11)
+
+
+def test_cigar_counts_and_score():
+    ops = jnp.asarray(np.array([0, 0, 1, 2, 2, 3, 0, -1], np.int8))
+    n = jnp.int32(7)
+    counts = np.asarray(cigar_counts(ops, n))
+    np.testing.assert_array_equal(counts, [3, 1, 2, 1])
+    s = int(cigar_score(ops, n, match=2, subs=-4, gap_open=-4, gap_extend=-2))
+    # 3M=6, 1X=-4, I-run: open+2·extend=-4-2·2... open counted once + extends
+    assert s == 6 - 4 + (-4 - 2) + (-2) + (-4 - 2)
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt_mod.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                              total_steps=200, moment_dtype="float32")
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = opt_mod.init(cfg, params)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = opt_mod.apply(cfg, params, opt, g)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adamw_bf16_moments_shapes():
+    cfg = opt_mod.AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((8, 4))}
+    opt = opt_mod.init(cfg, params)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    params2, opt2, m = opt_mod.apply(cfg, params, opt, {"w": jnp.ones((8, 4))})
+    assert params2["w"].dtype == params["w"].dtype
+    assert np.isfinite(float(m["grad_norm"]))

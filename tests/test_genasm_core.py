@@ -1,0 +1,126 @@
+"""GenASM core correctness: DC vs Levenshtein oracle, TB CIGAR validity."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import genasm, genasm_dc, oracle
+from repro.core.genasm import GenASMConfig
+
+from conftest import mutate_seq
+
+
+def _align(pat, text, p_cap=256, cfg=GenASMConfig()):
+    pbuf = np.full((p_cap,), 4, np.int8)
+    pbuf[: len(pat)] = pat
+    tbuf = np.full((p_cap,), 4, np.int8)
+    tbuf[: min(len(text), p_cap)] = text[:p_cap]
+    return genasm.align(jnp.asarray(tbuf), jnp.asarray(pbuf),
+                        jnp.int32(len(pat)), jnp.int32(min(len(text), p_cap)),
+                        cfg=cfg, p_cap=p_cap)
+
+
+def test_exact_match_zero_distance(rng):
+    ref = rng.integers(0, 4, size=120).astype(np.int8)
+    res = _align(ref[:80], ref)
+    assert int(res.distance) == 0
+    assert int(res.n_ops) == 80
+    assert np.all(np.asarray(res.ops)[:80] == 0)
+
+
+def test_bitap_search_matches_oracle(rng):
+    for _ in range(10):
+        m = int(rng.integers(5, 38))
+        text = rng.integers(0, 4, size=64).astype(np.int8)
+        pat = mutate_seq(text[:m], rng.integers(0, 3), rng.integers(0, 2),
+                         rng.integers(0, 2), rng)
+        want = min(oracle.levenshtein_prefix(pat, text), 11)
+        pbuf = np.full((64,), 4, np.int8)
+        pbuf[: len(pat)] = pat
+        tbuf = np.full((128,), 4, np.int8)
+        tbuf[:64] = text
+        d = genasm_dc.bitap_search(jnp.asarray(tbuf), jnp.asarray(pbuf),
+                                   m_bits=64, k=10)
+        assert int(np.asarray(d)[0]) == want
+
+
+def test_windowed_align_distance_and_cigar(rng):
+    """Windowed GenASM: distance within the paper's documented greedy-window
+    slack of the oracle; CIGAR always consistent (§4.10.2)."""
+    exact = 0
+    for _ in range(15):
+        m = int(rng.integers(30, 180))
+        ref = rng.integers(0, 4, size=m + 50).astype(np.int8)
+        pat = mutate_seq(ref[:m], rng.integers(0, 4), rng.integers(0, 3),
+                         rng.integers(0, 3), rng)
+        want = oracle.levenshtein_prefix(pat, ref)
+        res = _align(pat, ref)
+        got = int(res.distance)
+        assert got >= 0, "alignment failed"
+        err = oracle.check_cigar(np.asarray(res.ops), int(res.n_ops), pat, ref, got)
+        assert err is None, err
+        assert want <= got <= want + 3
+        exact += got == want
+    assert exact >= 12  # ≥80% exact, matching the paper's accuracy analysis
+
+
+def test_align_batch_shapes(rng):
+    pats = rng.integers(0, 4, size=(4, 128)).astype(np.int8)
+    texts = rng.integers(0, 4, size=(4, 128)).astype(np.int8)
+    res = genasm.align_batch(jnp.asarray(texts), jnp.asarray(pats),
+                             jnp.full((4,), 100, np.int32),
+                             jnp.full((4,), 128, np.int32))
+    assert res.distance.shape == (4,)
+    assert res.ops.ndim == 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_bitap_distance_exact(data):
+    """Property: full-length Bitap == DP oracle for any random pair."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    m = data.draw(st.integers(4, 30))
+    n = data.draw(st.integers(m, 60))
+    pat = rng.integers(0, 4, size=m).astype(np.int8)
+    text = rng.integers(0, 4, size=n).astype(np.int8)
+    want = min(oracle.levenshtein_prefix(pat, text), 9)
+    pbuf = np.full((32,), 4, np.int8)
+    pbuf[:m] = pat
+    tbuf = np.full((n + 32,), 4, np.int8)
+    tbuf[:n] = text
+    d = genasm_dc.bitap_search(jnp.asarray(tbuf), jnp.asarray(pbuf),
+                               m_bits=32, k=8)
+    assert int(np.asarray(d)[0]) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_property_cigar_invariants(data):
+    """Property: windowed GenASM CIGAR applies cleanly for any mutation mix."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    m = data.draw(st.integers(20, 120))
+    ref = rng.integers(0, 4, size=m + 40).astype(np.int8)
+    pat = mutate_seq(ref[:m], data.draw(st.integers(0, 3)),
+                     data.draw(st.integers(0, 2)), data.draw(st.integers(0, 2)),
+                     rng)
+    res = _align(pat, ref)
+    if int(res.distance) >= 0:
+        err = oracle.check_cigar(np.asarray(res.ops), int(res.n_ops), pat, ref,
+                                 int(res.distance))
+        assert err is None, err
+
+
+def test_store_r_parity_with_paper_store(rng):
+    """v2 (R-only TB store) must reproduce v1 distances and valid CIGARs."""
+    for _ in range(8):
+        m = int(rng.integers(30, 160))
+        ref_seq = rng.integers(0, 4, size=m + 50).astype(np.int8)
+        pat = mutate_seq(ref_seq[:m], rng.integers(0, 4), rng.integers(0, 2),
+                         rng.integers(0, 2), rng)
+        r1 = _align(pat, ref_seq)
+        r2 = _align(pat, ref_seq, cfg=GenASMConfig(store_r=True))
+        assert int(r1.distance) == int(r2.distance)
+        if int(r2.distance) >= 0:
+            err = oracle.check_cigar(np.asarray(r2.ops), int(r2.n_ops), pat,
+                                     ref_seq, int(r2.distance))
+            assert err is None, err

@@ -1,0 +1,68 @@
+"""Genomics substrate: encode/pack, FASTA/FASTQ IO, simulator, pipeline."""
+import numpy as np
+
+from repro.genomics import encode, io, pipeline, simulate
+
+
+def test_encode_roundtrip():
+    s = "ACGTNacgt"
+    ids = encode.encode(s)
+    assert encode.decode(ids) == "ACGTNACGT"
+
+
+def test_pack_2bit_roundtrip(rng):
+    ids = rng.integers(0, 4, size=1001).astype(np.int8)
+    packed = encode.pack_2bit(ids)
+    out = encode.unpack_2bit(packed, 1001)
+    np.testing.assert_array_equal(out, ids)
+    assert packed.nbytes * 4 <= ids.nbytes + 64  # 4x compression
+
+
+def test_fasta_fastq_roundtrip(tmp_path, rng):
+    recs = [io.Record(f"r{i}", rng.integers(0, 4, size=37).astype(np.int8))
+            for i in range(3)]
+    io.write_fasta(tmp_path / "x.fa", recs, width=10)
+    back = list(io.read_fasta(tmp_path / "x.fa"))
+    assert [r.name for r in back] == ["r0", "r1", "r2"]
+    np.testing.assert_array_equal(back[1].seq, recs[1].seq)
+    io.write_fastq(tmp_path / "x.fq", recs)
+    back = list(io.read_fastq(tmp_path / "x.fq"))
+    np.testing.assert_array_equal(back[2].seq, recs[2].seq)
+
+
+def test_cigar_string():
+    ops = np.array([0, 0, 0, 1, 2, 2, 3, 0], np.int8)
+    assert io.cigar_string(ops, 8) == "3M1X2I1D1M"
+
+
+def test_simulator_error_rate(rng):
+    ref = simulate.random_reference(4000, seed=0)
+    out = simulate.mutate(ref, simulate.ILLUMINA, rng)
+    # length roughly preserved (ins ≈ del rates)
+    assert abs(len(out) - len(ref)) < len(ref) * 0.05
+    # substitution-only profile: positional identity ≈ 1 - rate·frac_sub
+    subs_only = simulate.ErrorProfile("s", 0.05, 1.0, 0.0, 0.0)
+    out2 = simulate.mutate(ref, subs_only, rng)
+    same = np.mean(out2 == ref)
+    assert 0.90 < same < 0.99
+
+
+def test_read_batches_sharding():
+    reads = [np.arange(i + 1, dtype=np.int8) % 4 for i in range(10)]
+    b0 = list(pipeline.ReadBatches(reads, batch=2, cap=16, process_index=0,
+                                   process_count=2))
+    b1 = list(pipeline.ReadBatches(reads, batch=2, cap=16, process_index=1,
+                                   process_count=2))
+    assert len(b0) == 3 and len(b1) == 3
+    # disjoint coverage: lengths identify reads
+    lens0 = {int(l) for _, _, ls in b0 for l in ls if l > 0}
+    lens1 = {int(l) for _, _, ls in b1 for l in ls if l > 0}
+    assert lens0 & lens1 == set()
+    assert lens0 | lens1 == set(range(1, 11))
+
+
+def test_read_batches_resume():
+    reads = [np.zeros(4, np.int8)] * 8
+    it = pipeline.ReadBatches(reads, batch=2, cap=8, start_batch=2)
+    ids = [b for b, _, _ in it]
+    assert ids == [2, 3]

@@ -1,0 +1,50 @@
+"""Linear mapper end-to-end + pre-alignment filter accuracy."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import filter as gfilter
+from repro.core import mapper, minimizer_index, oracle
+from repro.genomics import encode, simulate
+
+
+def test_mapper_end_to_end():
+    ref = simulate.random_reference(4000, seed=11)
+    idx = minimizer_index.build_reference_index(ref, w=8, k=12)
+    rs = simulate.simulate_reads(ref, n_reads=12, read_len=120,
+                                 profile=simulate.ILLUMINA, seed=3)
+    reads, lens = encode.batch_reads(rs.reads, 128)
+    res = mapper.map_batch(idx, jnp.asarray(reads), jnp.asarray(lens),
+                           p_cap=192, filter_bits=128, filter_k=16,
+                           minimizer_w=8, minimizer_k=12)
+    pos = np.asarray(res.position)
+    ok = np.abs(pos - rs.true_pos) <= 16
+    assert ok.sum() >= 10  # ≥80% correctly placed at 5% error rate
+    # mapped reads have valid distances
+    d = np.asarray(res.distance)
+    assert np.all(d[pos >= 0] >= 0)
+
+
+def test_filter_exactness():
+    """GenASM-DC filter distance == oracle ⇒ zero false accept/reject."""
+    rng = np.random.default_rng(5)
+    k, m = 5, 100
+    m_bits, n = 128, 128 + 2 * 5 + 16
+    B = 32
+    texts = np.full((B, n), 4, np.int8)
+    reads = np.full((B, m_bits), 4, np.int8)
+    truth = np.zeros(B, bool)
+    for i in range(B):
+        r = rng.integers(0, 4, size=m).astype(np.int8)
+        if i % 2 == 0:
+            t = r.copy()
+            for _ in range(rng.integers(0, k + 1)):
+                j = rng.integers(0, m)
+                t[j] = (t[j] + 1) % 4
+        else:
+            t = rng.integers(0, 4, size=m + 2 * k).astype(np.int8)
+        texts[i, : len(t)] = t
+        reads[i, :m] = r
+        truth[i] = oracle.levenshtein_prefix(r, t) <= k
+    accept, dist = gfilter.filter_candidates(jnp.asarray(texts), jnp.asarray(reads),
+                                             None, m_bits=m_bits, k=k)
+    np.testing.assert_array_equal(np.asarray(accept), truth)

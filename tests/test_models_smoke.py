@@ -1,0 +1,81 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig, reduced
+from repro.models import model_zoo
+
+SMOKE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_train_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = model_zoo.init(cfg, jax.random.PRNGKey(0))
+    batch = model_zoo.synth_batch(cfg, SMOKE)["batch"]
+    batch["tokens"] = batch["tokens"] % cfg.vocab
+    batch["targets"] = batch["targets"] % cfg.vocab
+    loss, metrics = model_zoo.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    assert 0 < float(loss) < 20
+    grads = jax.grad(lambda p: model_zoo.loss_fn(cfg, p, batch)[0])(params)
+    gn = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(jnp.square(l.astype(jnp.float32)))), grads, 0.0)
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = model_zoo.init(cfg, jax.random.PRNGKey(0))
+    B = 2
+    state = model_zoo.decode_state_init(cfg, B, 64)
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32)}
+    if model_zoo.is_encdec(cfg):
+        batch["memory"] = jnp.zeros((B, 16, cfg.d_model), jnp.bfloat16)
+    logits, state = model_zoo.decode_fn(cfg, params, state, batch, jnp.int32(0))
+    logits, _ = model_zoo.decode_fn(cfg, params, state, batch, jnp.int32(1))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = model_zoo.init(cfg, jax.random.PRNGKey(0))
+    shape = ShapeConfig("pf", seq_len=32, global_batch=2, kind="prefill")
+    batch = model_zoo.synth_batch(cfg, shape)["batch"]
+    batch["tokens"] = batch["tokens"] % cfg.vocab
+    logits = model_zoo.prefill_fn(cfg, params, batch)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_loss_decreases():
+    """~100k-param model, a few optimizer steps: loss must go down."""
+    from repro.train import loop as train_loop
+
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = reduced(get_config("yi-6b"))
+    tcfg = train_loop.TrainConfig(
+        microbatches=2,
+        adamw=AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=50))
+    params, opt_state = train_loop.init_state(cfg, tcfg, jax.random.PRNGKey(1))
+    step = jax.jit(train_loop.build_train_step(cfg, tcfg))
+    rngnp = np.random.default_rng(0)
+    toks = rngnp.integers(0, cfg.vocab, size=(4, 32))
+    batch = {
+        "tokens": jnp.asarray(toks, jnp.int32),
+        "targets": jnp.asarray(np.roll(toks, -1, 1), jnp.int32),
+        "mask": jnp.ones((4, 32), jnp.float32),
+    }
+    losses = []
+    for _ in range(12):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses

@@ -1,0 +1,14 @@
+"""Distribution subsystem: sharding resolution + fault tolerance.
+
+Two layers (DESIGN.md §5):
+
+* ``sharding`` — resolves the models' *logical axis* annotations
+  (``repro.models.layers``) into concrete ``PartitionSpec`` trees for an
+  arbitrary mesh, and provides the activation-constraint helpers the
+  forward passes call at layer boundaries.
+* ``fault`` — host-side fault tolerance: the lease-based ``WorkQueue``
+  (work stealing for stragglers/failures), the ``Heartbeat`` straggler
+  detector, and ``RestartableLoop`` resume-from-checkpoint driving
+  ``repro.ckpt.checkpoint``.
+"""
+from . import fault, sharding  # noqa: F401

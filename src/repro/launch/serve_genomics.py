@@ -28,6 +28,8 @@ def main(argv=None):
     ap.add_argument("--profile", default="illumina",
                     choices=list(simulate.PROFILES))
     ap.add_argument("--out", default=None, help="PAF output path")
+    ap.add_argument("--lease-s", type=float, default=600.0,
+                    help="work-queue lease; expired leases are stolen")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas GenASM-DC kernel path")
     args = ap.parse_args(argv)
@@ -46,8 +48,12 @@ def main(argv=None):
         filter_k=max(8, int(args.read_len * prof.error_rate * 1.5)),
         minimizer_w=8, minimizer_k=12))
 
-    batches = list(pipeline.ReadBatches(rs.reads, batch=args.batch, cap=cap))
-    q = WorkQueue(len(batches), lease_s=600)
+    pi, pc = jax.process_index(), jax.process_count()
+    n_shard = len(range(pi, args.reads, pc))  # reads this process owns
+    batches = list(pipeline.ReadBatches(
+        rs.reads, batch=args.batch, cap=cap,
+        process_index=pi, process_count=pc))
+    q = WorkQueue(len(batches), lease_s=args.lease_s)
     rows = []
     t0 = time.time()
     mapped = 0
@@ -62,7 +68,8 @@ def main(argv=None):
         ops = np.asarray(res.ops)
         n_ops = np.asarray(res.n_ops)
         for i in range(len(pos)):
-            gid = b * args.batch + i
+            # global read id under process_index striding (pipeline.ReadBatches)
+            gid = pi + (b * args.batch + i) * pc
             if gid >= args.reads or lens[i] == 0:
                 continue
             if pos[i] >= 0:
@@ -80,8 +87,9 @@ def main(argv=None):
     correct = sum(
         1 for r in rows
         if abs(r["tstart"] - rs.true_pos[int(r["qname"][4:])]) <= 16)
-    print(f"mapped {mapped}/{args.reads} reads in {dt:.2f}s "
-          f"({args.reads / dt:.1f} reads/s); position-correct: {correct}/{mapped}")
+    print(f"mapped {mapped}/{n_shard} reads in {dt:.2f}s "
+          f"({n_shard / dt if dt else 0.0:.1f} reads/s); "
+          f"position-correct: {correct}/{mapped}")
     if args.out:
         io.write_paf(args.out, rows)
         print(f"wrote {args.out}")

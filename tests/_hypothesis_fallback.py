@@ -1,0 +1,92 @@
+"""Deterministic fallback for the tiny ``hypothesis`` subset the suite uses.
+
+When the real ``hypothesis`` package is installed (see pyproject.toml) it
+is always preferred — ``conftest.py`` only installs this shim into
+``sys.modules`` when the import fails, so environments without the
+package (hermetic CI containers) still *run* the property tests instead
+of erroring at collection.
+
+Covered subset: ``@settings(max_examples=N, deadline=None)``,
+``@given(st.data())``, ``data.draw(st.integers(lo, hi))``.  Draws are
+seeded by example index, so runs are deterministic (no shrinking, no
+database — this is a fallback, not a replacement).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+
+class _IntegersStrategy:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def _draw(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))  # hypothesis-inclusive
+
+
+class _DataObject:
+    def __init__(self, seed: int):
+        self._rng = np.random.default_rng(seed)
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rng)
+
+
+class _DataStrategy:
+    def _example(self, i: int):
+        return _DataObject(0xD15C0 + i)
+
+
+def integers(min_value: int, max_value: int):
+    return _IntegersStrategy(min_value, max_value)
+
+
+def data():
+    return _DataStrategy()
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(**fixtures):
+            n = getattr(runner, "_max_examples", 20)
+            for i in range(n):
+                drawn = [s._example(i) if isinstance(s, _DataStrategy)
+                         else s._draw(np.random.default_rng(i))
+                         for s in strategies]
+                fn(*drawn, **fixtures)
+
+        # hide the drawn params from pytest's fixture resolution
+        fix = [p for p in inspect.signature(fn).parameters.values()
+               ][len(strategies):]
+        runner.__signature__ = inspect.Signature(fix)
+        del runner.__wrapped__  # keep pytest off the original signature
+        return runner
+
+    return deco
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.data = data
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

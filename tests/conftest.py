@@ -1,5 +1,18 @@
+import importlib.util
+import pathlib
+
 import numpy as np
 import pytest
+
+try:  # real hypothesis when available; deterministic fallback otherwise
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback",
+        pathlib.Path(__file__).parent / "_hypothesis_fallback.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()
 
 
 @pytest.fixture

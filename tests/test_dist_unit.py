@@ -1,0 +1,189 @@
+"""Focused unit tests for repro.dist beyond the seed suites:
+WorkQueue lease/steal semantics, Heartbeat flagging, and the ``_fit``
+spec-to-shape reconciler on degenerate meshes."""
+import os
+import time
+
+import pytest
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.fault import Heartbeat, RestartableLoop, WorkQueue
+from repro.dist.sharding import _fit, batch_specs, param_specs
+
+
+# ------------------------------------------------------------- WorkQueue ---
+
+def test_workqueue_prefers_fresh_items_over_steals():
+    q = WorkQueue(3, lease_s=0.0)  # every lease instantly stealable
+    first = [q.claim() for _ in range(3)]
+    # all three fresh items are issued before any steal happens
+    assert sorted(first) == [0, 1, 2]
+
+
+def test_workqueue_steals_longest_expired_first():
+    q = WorkQueue(2, lease_s=0.0)
+    a = q.claim()
+    time.sleep(0.01)
+    b = q.claim()
+    # both leases are expired; a's expiry is older, so a is re-issued first
+    assert q.claim() == a
+    assert q.claim() == b
+
+
+def test_workqueue_live_leases_are_not_stolen():
+    q = WorkQueue(1, lease_s=60.0)
+    assert q.claim() == 0
+    assert q.claim() is None  # leased and live: nothing claimable
+    assert not q.finished
+    q.complete(0)
+    assert q.finished
+    assert q.claim() is None  # drained
+
+
+def test_workqueue_complete_is_idempotent_and_fail_requeues():
+    q = WorkQueue(2, lease_s=60.0)
+    a = q.claim()
+    q.fail(a)  # returned to the head: next claim gets it back
+    assert q.claim() == a
+    q.complete(a)
+    q.complete(a)  # duplicate completion (stolen twin) is harmless
+    b = q.claim()
+    q.complete(b)
+    assert q.finished
+
+
+def test_workqueue_empty_is_finished():
+    q = WorkQueue(0)
+    assert q.finished
+    assert q.claim() is None
+
+
+# ------------------------------------------------------------- Heartbeat ---
+
+def test_heartbeat_warmup_never_flags():
+    hb = Heartbeat(factor=1.0, warmup=100)
+    for _ in range(20):
+        assert hb.beat() is False
+
+
+def test_heartbeat_flags_then_recovers():
+    hb = Heartbeat(factor=4.0, warmup=3)
+    for _ in range(8):
+        hb.beat()
+        time.sleep(0.01)
+    time.sleep(0.1)
+    assert hb.beat() is True  # straggler gap
+    assert hb.straggler_count == 1
+    for _ in range(4):  # baseline not poisoned by the straggler gap
+        time.sleep(0.01)
+        assert hb.beat() is False
+
+
+# ------------------------------------------------------------------ _fit ---
+
+def _mesh(shape, axes):
+    return jax.make_mesh(shape, axes)
+
+
+def test_fit_basic_and_padding():
+    mesh = _mesh((2, 2), ("data", "model"))
+    assert _fit(mesh, (8, 16), (None, "model")) == P(None, "model")
+    # shorter want pads on the left (stacked-blocks leading axis)
+    assert _fit(mesh, (3, 8, 16), (None, "model")) == P(None, None, "model")
+    # longer want drops leading entries
+    assert _fit(mesh, (16,), (None, "model")) == P("model")
+
+
+def test_fit_drops_nondivisible_and_unknown_axes():
+    mesh = _mesh((2, 2), ("data", "model"))
+    assert _fit(mesh, (7, 16), ("model", None)) == P()  # 7 % 2 != 0
+    assert _fit(mesh, (8, 16), ("pod", "model")) == P(None, "model")
+
+
+def test_fit_never_reuses_a_mesh_axis():
+    mesh = _mesh((2, 2), ("data", "model"))
+    # both dims want "model": only the first gets it (EP-over-experts rule)
+    assert _fit(mesh, (4, 8), ("model", "model")) == P("model")
+
+
+def test_fit_single_device_mesh_is_degenerate():
+    mesh = _mesh((1,), ("data",))
+    assert _fit(mesh, (8, 16), ("model", "data")) == P(None, "data")
+    spec = _fit(mesh, (7, 13), ("data", "model"))
+    assert spec == P("data") or spec == P()  # axis of size 1 divides all
+
+
+def test_fit_axis_size_one():
+    mesh = _mesh((4, 1), ("data", "model"))
+    # "model" has size 1: sharding over it is legal and a no-op
+    assert _fit(mesh, (6, 9), (None, "model")) == P(None, "model")
+
+
+def test_fit_tuple_axes_partial_fit():
+    mesh = _mesh((2, 2), ("pod", "data"))
+    # dim 4 fits pod×data (2×2); dim 2 keeps only the first axis of the pair
+    assert _fit(mesh, (4, 8), (("pod", "data"), None)) == P(("pod", "data"))
+    assert _fit(mesh, (2, 8), (("pod", "data"), None)) == P("pod")
+
+
+# ----------------------------------------------------- spec tree shapes ---
+
+def test_param_and_batch_specs_divide_shapes():
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import model_zoo
+    import jax.numpy as jnp
+
+    mesh = _mesh((2, 2), ("data", "model"))
+    cfg = reduced(get_config("mixtral-8x7b"), n_heads=4, n_kv_heads=2,
+                  vocab=512)
+    params = jax.eval_shape(
+        lambda k: model_zoo.init(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = param_specs(params, mesh)
+    sizes = dict(mesh.shape)
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]):
+        assert isinstance(spec, P)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            assert dim % int(np.prod([sizes[a] for a in axes])) == 0, (
+                path, leaf.shape, spec)
+    # MoE experts shard over "model"; the router stays replicated
+    moe_spec = specs["blocks"]["slot0"]["moe"]
+    assert moe_spec["wi"][1] == "model"  # (stack, EXPERT, EMBED, MLP)
+    assert moe_spec["router"] == P()
+
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    assert batch_specs(batch, mesh)["tokens"] == P("data")
+
+
+# -------------------------------------------------- RestartableLoop edge ---
+
+def test_restartable_loop_no_checkpoint_runs_all(tmp_path):
+    from repro.ckpt.checkpoint import CheckpointManager
+    import jax.numpy as jnp
+
+    mgr = CheckpointManager(tmp_path, keep=2)
+    loop = RestartableLoop(mgr, save_every=4)
+    out = loop.run({"c": jnp.int32(0)},
+                   lambda st, i: {"c": st["c"] + 1}, n_steps=6)
+    assert int(out["c"]) == 6
+    mgr.wait()
+    assert mgr.latest_step() == 6
+    # a second run resumes from the final checkpoint: zero extra steps
+    calls = []
+    out2 = loop.run({"c": jnp.int32(0)},
+                    lambda st, i: calls.append(i) or {"c": st["c"] + 1},
+                    n_steps=6)
+    assert calls == []
+    assert int(out2["c"]) == 6

@@ -8,16 +8,18 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bitalign         — Fig 6-15 (BitAlign vs graph-DP / PaSGAL stand-in)
   segram_e2e       — Figs 6-11..6-14 (SeGraM end-to-end mapping)
   kernel_dc        — Ch. 5 BitMAc kernel analysis
+  serve_engine     — micro-batching engine under Poisson arrivals
   roofline         — §Roofline table from the multi-pod dry-run
 """
 from __future__ import annotations
 
+import inspect
 import sys
 
 
 def main() -> None:
     from . import (bitalign, edit_distance, kernel_dc, prealign_filter,
-                   read_alignment, roofline, segram_e2e)
+                   read_alignment, roofline, segram_e2e, serve_engine)
 
     mods = {
         "read_alignment": read_alignment,
@@ -26,6 +28,7 @@ def main() -> None:
         "bitalign": bitalign,
         "segram_e2e": segram_e2e,
         "kernel_dc": kernel_dc,
+        "serve_engine": serve_engine,
         "roofline": roofline,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -34,7 +37,12 @@ def main() -> None:
         if only and name != only:
             continue
         try:
-            mod.main()
+            # modules with an argv parameter parse CLI flags; hand them an
+            # empty argv so the harness's own argument doesn't reach argparse
+            if "argv" in inspect.signature(mod.main).parameters:
+                mod.main([])
+            else:
+                mod.main()
         except Exception as e:  # keep the harness running
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
 

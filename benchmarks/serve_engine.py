@@ -1,0 +1,125 @@
+"""Serving-engine benchmark: Poisson arrivals, bucketed vs single-cap.
+
+Replays a mixed short/long read set (Illumina 150 bp + PacBio 1000 bp by
+default) through the `repro.serve` micro-batching engine under open-loop
+Poisson arrivals, twice: once with the length-bucket ladder and once with
+every read padded to the single global cap (the old offline behaviour).
+Reports reads/s, p50/p99 latency, mean batch occupancy, padded-base
+waste, and cache hit rate per run — the EXPERIMENTS.md §Perf serve rows.
+
+    PYTHONPATH=src python benchmarks/serve_engine.py           # full mix
+    PYTHONPATH=src python benchmarks/serve_engine.py --smoke   # CI-sized
+    ... --json serve_summary.json                              # artifact
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import minimizer_index
+from repro.genomics import simulate
+from repro.serve import EngineConfig, Metrics, ResultCache, ServeEngine, \
+    poisson_load
+
+try:
+    from .common import row
+except ImportError:  # script-style: python benchmarks/serve_engine.py
+    from common import row
+
+
+def mixed_reads(ref, *, n_short: int, n_long: int, short_len: int,
+                long_len: int, seed: int):
+    """Interleaved short(Illumina)/long(PacBio) mix, long reads sprinkled in."""
+    shorts = simulate.simulate_reads(ref, n_reads=n_short, read_len=short_len,
+                                     profile=simulate.ILLUMINA, seed=seed)
+    longs = simulate.simulate_reads(ref, n_reads=n_long, read_len=long_len,
+                                    profile=simulate.PACBIO_CLR, seed=seed + 1)
+    reads = list(shorts.reads)
+    stride = max(len(reads) // max(n_long, 1), 1)
+    for i, r in enumerate(longs.reads):
+        reads.insert(min((i + 1) * stride, len(reads)), r)
+    return reads
+
+
+def run_engine(index, reads, *, buckets, max_batch, max_delay_s, rate_rps,
+               filter_k, warmup_reads, seed):
+    cfg = EngineConfig(buckets=buckets, max_batch=max_batch,
+                       max_delay_s=max_delay_s, filter_k=filter_k)
+    engine = ServeEngine(index, cfg)
+    engine.map_all(warmup_reads)  # compile every bucket executor off-clock
+    engine.metrics = Metrics()  # measured run starts from clean instruments
+    engine.cache = ResultCache(cfg.cache_capacity)
+    rep = poisson_load(engine, reads, rate_rps=rate_rps, seed=seed)
+    m = rep.metrics
+    useful, waste = m.get("bases_useful", 0.0), m.get("bases_padded_read", 0.0)
+    summary = {
+        "buckets": list(buckets),
+        "n_reads": len(reads),
+        "reads_per_s": round(rep.reads_per_s, 2),
+        "p50_ms": round(rep.p50_ms, 3),
+        "p99_ms": round(rep.p99_ms, 3),
+        "batch_occupancy": round(m.get("batch_occupancy_mean", 0.0), 4),
+        "pad_waste_frac": round(waste / max(useful + waste, 1.0), 4),
+        "padded_bases_per_read": round(waste / max(len(reads), 1), 1),
+        "cache_hit_rate": round(engine.cache.hit_rate, 4),
+        "executors": engine.n_executors,
+    }
+    engine.close()
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small ref, short ladder)")
+    ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (reads/s)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        ref_len, n_short, n_long = 6_000, 40, 8
+        short_len, long_len = 100, 300
+        buckets, max_batch, rate = (128, 320), 8, args.rate or 400.0
+    else:
+        ref_len, n_short, n_long = 20_000, 112, 16
+        short_len, long_len = 150, 1000
+        buckets, max_batch, rate = (160, 320, 640, 1280), 16, args.rate or 100.0
+    single_cap = (buckets[-1],)
+
+    ref = simulate.random_reference(ref_len, seed=1)
+    index = minimizer_index.build_epoched_index(ref, w=8, k=12)
+    reads = mixed_reads(ref, n_short=n_short, n_long=n_long,
+                        short_len=short_len, long_len=long_len, seed=2)
+    warmup = mixed_reads(ref, n_short=2, n_long=2, short_len=short_len,
+                         long_len=long_len, seed=99)
+    common = dict(max_batch=max_batch, max_delay_s=0.005, rate_rps=rate,
+                  filter_k=max(8, int(min(short_len, 128) * 0.05 * 1.5) + 4),
+                  warmup_reads=warmup, seed=args.seed)
+
+    out = {"mix": f"{n_short}x{short_len}bp+{n_long}x{long_len}bp",
+           "rate_rps": rate}
+    for name, bk in (("bucketed", buckets), ("single_cap", single_cap)):
+        s = run_engine(index, reads, buckets=bk, **common)
+        out[name] = s
+        row(f"serve_engine_{name}", 1e6 / max(s["reads_per_s"], 1e-9),
+            f"reads_per_s={s['reads_per_s']};p50_ms={s['p50_ms']};"
+            f"p99_ms={s['p99_ms']};occupancy={s['batch_occupancy']};"
+            f"pad_waste={s['pad_waste_frac']};"
+            f"pad_bases_per_read={s['padded_bases_per_read']}")
+    out["pad_waste_reduction"] = round(
+        out["single_cap"]["padded_bases_per_read"]
+        / max(out["bucketed"]["padded_bases_per_read"], 1e-9), 2)
+    row("serve_engine_bucketing_win",
+        0.0, f"padded_bases_per_read_reduction="
+             f"{out['pad_waste_reduction']}x")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,38 @@
-"""End-to-end driver: batched read-mapping service (seed → filter → align),
-with work-queue fault tolerance and PAF output — the paper's workload.
+"""Online read-mapping with the `repro.serve` micro-batching engine.
+
+Submits a stream of simulated reads through the async serving API
+(`submit() -> future`), prints per-read latency as results resolve, and
+ends with the engine's metrics snapshot (queue/batch/cache/latency
+counters — DESIGN.md §8).
 
     PYTHONPATH=src python examples/read_mapping.py
 """
-from repro.launch.serve_genomics import main
+from repro.core import minimizer_index
+from repro.genomics import simulate
+from repro.serve import EngineConfig, ServeEngine, Session
 
-main(["--ref-len", "20000", "--reads", "48", "--read-len", "150",
-      "--batch", "16", "--out", "/tmp/mappings.paf"])
+ref = simulate.random_reference(8_000, seed=1)
+index = minimizer_index.build_epoched_index(ref, w=8, k=12)
+rs = simulate.simulate_reads(ref, n_reads=24, read_len=150,
+                             profile=simulate.ILLUMINA, seed=2)
+
+config = EngineConfig(buckets=(160, 320), max_batch=8, max_delay_s=0.005)
+with ServeEngine(index, config) as engine:
+    session = Session(engine)
+    for gid, read in enumerate(rs.reads):
+        session.submit(read, meta=gid)
+    results = session.drain()
+    # a resubmitted read is answered from the result cache (epoch-keyed)
+    session.submit(rs.reads[0], meta="dup-of-0")
+    results += session.drain()
+    print("gid        pos   dist  bucket  cached  latency")
+    for gid, res in results:
+        print(f"{str(gid):<9} {res.position:>5} {res.distance:>6} "
+              f"{res.bucket_cap:>7} {str(res.cached):>7} "
+              f"{res.latency_s * 1e3:>8.2f} ms")
+
+    correct = sum(abs(res.position - rs.true_pos[gid]) <= 16
+                  for gid, res in results if isinstance(gid, int))
+    print(f"\nposition-correct: {correct}/{len(rs.reads)}")
+    print("--- engine metrics ---")
+    print(engine.metrics.render())

@@ -1,6 +1,7 @@
 """Device-resident reference index for the linear mapper."""
 from __future__ import annotations
 
+import threading
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -23,3 +24,52 @@ def build_reference_index(ref: np.ndarray, *, w: int = 10, k: int = 15,
         hashes=jnp.asarray(idx.hashes),
         positions=jnp.asarray(idx.positions),
     )
+
+
+class EpochedIndex:
+    """Epoch-stamped handle around a ``ReferenceIndex``.
+
+    The serving layer keys its result cache on ``(read digest, epoch)``
+    (`serve/cache.py`), so swapping in a rebuilt reference must be
+    observable: ``refresh()`` replaces the index and bumps ``epoch``,
+    which atomically invalidates every result cached against the old
+    reference.  The handle is cheap to share — readers grab
+    ``(index, epoch)`` pairs under the lock via ``current()``.
+    """
+
+    def __init__(self, index: ReferenceIndex, *, w: int, k: int,
+                 epoch: int = 0, freq_frac: float = 0.0002):
+        # w/k are required: ReferenceIndex doesn't carry its build params,
+        # and defaulting them here would silently desync refresh() (and any
+        # consumer validating seeding params) from how `index` was built
+        self._lock = threading.Lock()
+        self._index = index
+        self.epoch = epoch
+        self._build_kw = dict(w=w, k=k, freq_frac=freq_frac)
+
+    @property
+    def index(self) -> ReferenceIndex:
+        return self._index
+
+    def current(self) -> tuple[ReferenceIndex, int]:
+        """Consistent (index, epoch) pair for one mapping batch."""
+        with self._lock:
+            return self._index, self.epoch
+
+    def refresh(self, ref: np.ndarray, **build_kw) -> int:
+        """Rebuild the index from a new reference; returns the new epoch."""
+        kw = {**self._build_kw, **build_kw}
+        new = build_reference_index(ref, **kw)
+        with self._lock:
+            self._index = new
+            self._build_kw = kw
+            self.epoch += 1
+            return self.epoch
+
+
+def build_epoched_index(ref: np.ndarray, *, w: int = 10, k: int = 15,
+                        freq_frac: float = 0.0002) -> EpochedIndex:
+    """Build a reference index wrapped in an epoch-stamped serving handle."""
+    return EpochedIndex(
+        build_reference_index(ref, w=w, k=k, freq_frac=freq_frac),
+        w=w, k=k, freq_frac=freq_frac)  # records the actual build params

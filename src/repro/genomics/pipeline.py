@@ -46,23 +46,70 @@ class ReadBatches:
 
 
 class Prefetcher:
-    """Double-buffered background prefetch (host encode ∥ device compute)."""
+    """Double-buffered background prefetch (host encode ∥ device compute).
+
+    A worker-thread exception is captured and re-raised in the consumer's
+    ``__iter__`` (a silent worker death would otherwise hang or truncate
+    the stream).  ``close()`` (or exiting the context manager) stops the
+    worker and joins it, even mid-stream with a full queue.
+    """
+
+    _DONE = object()  # stream-end sentinel (worker exception rides in _exc)
 
     def __init__(self, it, device_put=None, depth: int = 2):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.device_put = device_put or jax.device_put
+        self._exc: BaseException | None = None
+        self._stop = threading.Event()
         self._t = threading.Thread(target=self._run, args=(it,), daemon=True)
         self._t.start()
 
+    def _put(self, item) -> bool:
+        """Bounded put that aborts when close() raises the stop flag."""
+        while not self._stop.is_set():
+            try:
+                self.q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _run(self, it):
-        for item in it:
-            b, arr, lens = item
-            self.q.put((b, self.device_put(arr), self.device_put(lens)))
-        self.q.put(None)
+        try:
+            for b, arr, lens in it:
+                if not self._put((b, self.device_put(arr),
+                                  self.device_put(lens))):
+                    return  # closed mid-stream
+        except BaseException as e:  # noqa: BLE001 — hand it to the consumer
+            self._exc = e
+        self._put(self._DONE)
 
     def __iter__(self):
         while True:
-            item = self.q.get()
-            if item is None:
+            try:
+                item = self.q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop.is_set():  # closed elsewhere: no sentinel comes
+                    return
+                continue
+            if item is self._DONE:
+                if self._exc is not None:
+                    raise self._exc
                 return
             yield item
+
+    def close(self) -> None:
+        """Stop the worker and join it (idempotent; safe mid-stream)."""
+        self._stop.set()
+        while self._t.is_alive():  # drain so a blocked put can observe stop
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self._t.join(timeout=0.05)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,22 +1,90 @@
-"""Batched read-mapping service driver (the paper's workload, end-to-end).
+"""Read-mapping service driver (the paper's workload, end-to-end).
 
-Stateless batches through the lease-based work queue (straggler/failure
-reassignment), host prefetch overlapping device compute, PAF output.
+Both serving modes sit on the same ``repro.serve`` micro-batching engine
+(length-bucketed padding, per-bucket compiled executors, result cache —
+DESIGN.md §8), so they produce identical PAF for the same read set:
+
+* **offline** (default) — drain a fixed read set through the lease-based
+  work queue (straggler/failure reassignment, DESIGN.md §6); each claimed
+  quantum's reads are submitted to the engine.
+* **``--online``** — synthetic open-loop Poisson arrivals through the
+  engine's admission queue (`serve/session.py`), reporting reads/s and
+  tail latency.
+
 On a pod this runs one process per host with reads sharded by
-process_index (genomics/pipeline.py)."""
+process_index.
+"""
 from __future__ import annotations
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mapper, minimizer_index
+from repro.core import minimizer_index
 from repro.core.genasm import GenASMConfig
 from repro.dist.fault import WorkQueue
-from repro.genomics import encode, io, pipeline, simulate
+from repro.serve import EngineConfig, ServeEngine, Session, poisson_load
+from repro.genomics import io, simulate
+
+
+def paf_row(gid: int, res, ref_len: int) -> dict:
+    """PAF row dict for one mapped read.
+
+    Carries the global read id in ``"gid"`` (not a PAF column — strip via
+    `strip_gids` before `io.write_paf`), so qnames can be arbitrary
+    instead of being parsed back into ids.
+    """
+    L = res.read_len
+    return {
+        "gid": gid,
+        "qname": f"read{gid}", "qlen": L, "qstart": 0,
+        "qend": L, "strand": "+", "tname": "ref",
+        "tlen": ref_len, "tstart": res.position,
+        "tend": res.position + L, "nmatch": L - res.distance,
+        "alnlen": L, "mapq": 60,
+        "cigar": io.cigar_string(res.ops, res.n_ops),
+    }
+
+
+def strip_gids(rows: list[dict]) -> list[dict]:
+    return [{k: v for k, v in r.items() if k != "gid"} for r in rows]
+
+
+def _run_offline(engine: ServeEngine, reads, shard_ids, *, batch: int,
+                 lease_s: float) -> list[dict]:
+    """Work-queue path: claim a quantum of read ids, submit it, complete."""
+    quanta = [shard_ids[i: i + batch] for i in range(0, len(shard_ids), batch)]
+    q = WorkQueue(len(quanta), lease_s=lease_s)
+    rows: dict[int, dict] = {}  # keyed by gid: stolen twins overwrite, not dup
+    while True:
+        b = q.claim()
+        if b is None:
+            if q.finished:
+                break
+            time.sleep(0.01)  # all leases live; back off and retry
+            continue
+        sess = Session(engine)
+        for gid in quanta[b]:
+            sess.submit(reads[gid], meta=int(gid))
+        for gid, res in sess.drain():
+            if res.position >= 0:
+                rows[gid] = paf_row(gid, res, len(engine.index.index.ref))
+        q.complete(b)
+    return [rows[g] for g in sorted(rows)]
+
+
+def _run_online(engine: ServeEngine, reads, shard_ids, *, rate_rps: float,
+                seed: int) -> tuple[list[dict], object]:
+    """Poisson open-loop path through the engine's admission queue."""
+    rep = poisson_load(engine, [reads[g] for g in shard_ids],
+                       rate_rps=rate_rps, seed=seed,
+                       metas=[int(g) for g in shard_ids])
+    ref_len = len(engine.index.index.ref)
+    rows = [paf_row(gid, res, ref_len) for gid, res in rep.results
+            if res.position >= 0]
+    return sorted(rows, key=lambda r: r["gid"]), rep
 
 
 def main(argv=None):
@@ -32,66 +100,65 @@ def main(argv=None):
                     help="work-queue lease; expired leases are stolen")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas GenASM-DC kernel path")
+    ap.add_argument("--online", action="store_true",
+                    help="open-loop Poisson arrivals instead of the "
+                         "offline work-queue drain")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="--online arrival rate (reads/s)")
+    ap.add_argument("--buckets", default="160,320,640,1280",
+                    help="length-bucket ladder of pattern caps")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="micro-batch flush deadline")
     args = ap.parse_args(argv)
 
     prof = simulate.PROFILES[args.profile]
     ref = simulate.random_reference(args.ref_len, seed=1)
     print(f"indexing reference ({args.ref_len} bp)...")
-    idx = minimizer_index.build_reference_index(ref, w=8, k=12)
+    epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
     rs = simulate.simulate_reads(ref, n_reads=args.reads,
                                  read_len=args.read_len, profile=prof, seed=2)
-    cap = ((args.read_len + 63) // 64) * 64 + 64
-    cfg = GenASMConfig(use_kernel=args.use_kernel)
-
-    map_fn = jax.jit(lambda r, l: mapper.map_batch(
-        idx, r, l, cfg=cfg, p_cap=cap + 64, filter_bits=128,
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    need = ((args.read_len + 63) // 64) * 64 + 64  # offline driver's old cap
+    if max(buckets) < need:  # never trim reads the single-cap path held
+        buckets += (need,)
+    cfg = EngineConfig(
+        buckets=buckets, max_batch=args.batch,
+        max_delay_s=args.max_delay_ms / 1e3,
+        genasm=GenASMConfig(use_kernel=args.use_kernel),
         filter_k=max(8, int(args.read_len * prof.error_rate * 1.5)),
-        minimizer_w=8, minimizer_k=12))
+        minimizer_w=8, minimizer_k=12)
 
     pi, pc = jax.process_index(), jax.process_count()
-    n_shard = len(range(pi, args.reads, pc))  # reads this process owns
-    batches = list(pipeline.ReadBatches(
-        rs.reads, batch=args.batch, cap=cap,
-        process_index=pi, process_count=pc))
-    q = WorkQueue(len(batches), lease_s=args.lease_s)
-    rows = []
-    t0 = time.time()
-    mapped = 0
-    while True:
-        b = q.claim()
-        if b is None:
-            break
-        _, arr, lens = batches[b]
-        res = map_fn(jnp.asarray(arr), jnp.asarray(lens))
-        pos = np.asarray(res.position)
-        dist = np.asarray(res.distance)
-        ops = np.asarray(res.ops)
-        n_ops = np.asarray(res.n_ops)
-        for i in range(len(pos)):
-            # global read id under process_index striding (pipeline.ReadBatches)
-            gid = pi + (b * args.batch + i) * pc
-            if gid >= args.reads or lens[i] == 0:
-                continue
-            if pos[i] >= 0:
-                mapped += 1
-                rows.append({
-                    "qname": f"read{gid}", "qlen": int(lens[i]), "qstart": 0,
-                    "qend": int(lens[i]), "strand": "+", "tname": "ref",
-                    "tlen": args.ref_len, "tstart": int(pos[i]),
-                    "tend": int(pos[i]) + int(lens[i]), "nmatch": int(lens[i]) - int(dist[i]),
-                    "alnlen": int(lens[i]), "mapq": 60,
-                    "cigar": io.cigar_string(ops[i], int(n_ops[i])),
-                })
-        q.complete(b)
-    dt = time.time() - t0
+    shard_ids = np.arange(pi, args.reads, pc)  # this host's disjoint slice
+
+    with ServeEngine(epi, cfg) as engine:
+        t0 = time.time()
+        if args.online:
+            rows, rep = _run_online(engine, rs.reads, shard_ids,
+                                    rate_rps=args.rate, seed=7)
+            print(f"online: {rep.reads_per_s:.1f} reads/s, "
+                  f"p50 {rep.p50_ms:.1f} ms, p99 {rep.p99_ms:.1f} ms")
+        else:
+            rows = _run_offline(engine, rs.reads, shard_ids,
+                                batch=args.batch, lease_s=args.lease_s)
+        dt = time.time() - t0
+        m = engine.metrics.snapshot()
+        hit_rate = engine.cache.hit_rate
+
+    mapped = len(rows)
     correct = sum(
-        1 for r in rows
-        if abs(r["tstart"] - rs.true_pos[int(r["qname"][4:])]) <= 16)
-    print(f"mapped {mapped}/{n_shard} reads in {dt:.2f}s "
-          f"({n_shard / dt if dt else 0.0:.1f} reads/s); "
+        1 for r in rows if abs(r["tstart"] - rs.true_pos[r["gid"]]) <= 16)
+    occ = m.get("batch_occupancy_mean", 0.0)
+    useful = m.get("bases_useful", 0.0)
+    waste = m.get("bases_padded_read", 0.0)
+    print(f"mapped {mapped}/{len(shard_ids)} reads in {dt:.2f}s "
+          f"({len(shard_ids) / dt if dt else 0.0:.1f} reads/s); "
           f"position-correct: {correct}/{mapped}")
+    print(f"batch occupancy {occ:.2f}, padded-base waste "
+          f"{waste / max(useful + waste, 1):.1%}, "
+          f"cache hit rate {hit_rate:.1%}")
     if args.out:
-        io.write_paf(args.out, rows)
+        io.write_paf(args.out, strip_gids(rows))
         print(f"wrote {args.out}")
 
 

@@ -1,0 +1,211 @@
+"""repro.serve: buckets, deadline flush, executor/result caches, pipeline."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import minimizer_index
+from repro.genomics import pipeline, simulate
+from repro.launch import serve_genomics
+from repro.serve import EngineConfig, ResultCache, ServeEngine
+from repro.serve.metrics import Metrics
+
+
+@pytest.fixture(scope="module")
+def ref():
+    return simulate.random_reference(4000, seed=11)
+
+
+@pytest.fixture(scope="module")
+def epi(ref):
+    return minimizer_index.build_epoched_index(ref, w=8, k=12)
+
+
+@pytest.fixture(scope="module")
+def reads(ref):
+    short = simulate.simulate_reads(ref, n_reads=10, read_len=90,
+                                    profile=simulate.ILLUMINA, seed=3)
+    long = simulate.simulate_reads(ref, n_reads=2, read_len=150,
+                                   profile=simulate.ILLUMINA, seed=4)
+    return short, long
+
+
+@pytest.fixture(scope="module")
+def engine(epi):
+    cfg = EngineConfig(buckets=(96, 192), max_batch=4, max_delay_s=0.02,
+                       filter_k=10)
+    eng = ServeEngine(epi, cfg)
+    yield eng
+    eng.close()
+
+
+def test_bucket_selection_and_validation():
+    cfg = EngineConfig(buckets=(160, 96))  # unsorted on purpose
+    assert cfg.buckets == (96, 160)
+    assert cfg.bucket_for(1) == 96
+    assert cfg.bucket_for(96) == 96
+    assert cfg.bucket_for(97) == 160
+    assert cfg.bucket_for(500) == 160  # beyond the ladder: trim to top rung
+    with pytest.raises(ValueError):
+        EngineConfig(buckets=(100,))  # not a multiple of 32
+    with pytest.raises(ValueError):
+        EngineConfig(buckets=())
+
+
+def test_engine_maps_and_accounts_occupancy(engine, reads):
+    short, long = reads
+    res = engine.map_all(list(short.reads) + list(long.reads))
+    ok = sum(abs(r.position - tp) <= 16
+             for r, tp in zip(res, list(short.true_pos) + list(long.true_pos)))
+    assert ok >= 10  # ≥80% placed at 5% error
+    assert {r.bucket_cap for r in res} == {96, 192}
+    m = engine.metrics.snapshot()
+    # every admitted base is either useful or accounted padding
+    total = sum(min(r.read_len, r.bucket_cap) for r in res)
+    assert m["bases_useful"] == total
+    assert m["bases_padded_read"] == sum(
+        r.bucket_cap - min(r.read_len, r.bucket_cap) for r in res)
+    assert m["batch_occupancy_count"] == m["batches_flushed"] >= 3
+    assert 0.0 < m["batch_occupancy_mean"] <= 1.0
+
+
+def test_executor_cache_one_trace_per_bucket(engine, reads):
+    short, long = reads
+    engine.map_all(list(short.reads))  # repeat traffic into both buckets
+    engine.map_all(list(long.reads))
+    assert engine.n_executors == 2  # one per (bucket_cap, config)
+    assert engine.trace_counts == {96: 1, 192: 1}
+
+
+def test_deadline_triggered_flush(epi, reads):
+    short, _ = reads
+    cfg = EngineConfig(buckets=(96,), max_batch=8, max_delay_s=0.03,
+                       filter_k=10)
+    with ServeEngine(epi, cfg) as eng:
+        futs = [eng.submit(r) for r in short.reads[:3]]
+        res = [f.result(timeout=30) for f in futs]  # flushes despite 3 < 8
+    assert all(r.position >= 0 or r.position == -1 for r in res)
+    m = eng.metrics.snapshot()
+    assert m["batches_flushed"] == 1
+    assert m["batch_occupancy_mean"] == pytest.approx(3 / 8)
+
+
+def test_result_cache_hit_and_epoch_invalidation(ref, reads):
+    short, _ = reads
+    epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
+    cfg = EngineConfig(buckets=(96,), max_batch=4, max_delay_s=0.005,
+                       filter_k=10)
+    with ServeEngine(epi, cfg) as eng:
+        r0 = eng.map_all([short.reads[0]])[0]
+        assert not r0.cached
+        r1 = eng.map_all([short.reads[0]])[0]
+        assert r1.cached
+        assert (r1.position, r1.distance) == (r0.position, r0.distance)
+        assert eng.cache.hits == 1
+        epoch0 = epi.epoch
+        assert epi.refresh(ref) == epoch0 + 1  # same bases, new epoch
+        r2 = eng.map_all([short.reads[0]])[0]
+        assert not r2.cached  # old-epoch entry is unreachable
+        assert r2.position == r0.position
+
+
+def test_worker_exception_fails_futures_not_hangs(epi, reads):
+    short, _ = reads
+    cfg = EngineConfig(buckets=(96,), max_batch=4, max_delay_s=0.005,
+                       filter_k=10)
+    eng = ServeEngine(epi, cfg)
+
+    def boom(cap):
+        raise RuntimeError("executor boom")
+
+    eng._executor = boom
+    fut = eng.submit(short.reads[0])
+    with pytest.raises(RuntimeError):  # resolved with the error, no hang
+        fut.result(timeout=30)
+    with pytest.raises(RuntimeError):  # engine refuses new work after death
+        eng.submit(short.reads[1])
+    eng.close()  # shutdown of a dead engine is still clean
+    assert not eng._worker.is_alive()
+
+
+def test_engine_rejects_mismatched_minimizer_params(ref):
+    epi = minimizer_index.build_epoched_index(ref, w=10, k=15)
+    with pytest.raises(ValueError, match="minimizer"):
+        ServeEngine(epi, EngineConfig(buckets=(96,)))  # engine seeds w=8/k=12
+
+
+def test_result_cache_unit():
+    c = ResultCache(capacity=2)
+    a, b, d = (np.full(4, i, np.int8) for i in range(3))
+    c.put(a, 0, "A")
+    c.put(b, 0, "B")
+    assert c.get(a, 0) == "A" and c.get(a, 1) is None  # epoch is part of key
+    c.put(d, 0, "D")  # evicts b (a was touched more recently)
+    assert c.get(b, 0) is None and c.get(a, 0) == "A"
+    assert c.evict_epochs_below(1) == 2 and len(c) == 0
+    disabled = ResultCache(capacity=0)
+    disabled.put(a, 0, "A")
+    assert disabled.get(a, 0) is None
+    assert 0.0 <= c.hit_rate <= 1.0
+
+
+def test_metrics_histogram_and_render():
+    m = Metrics()
+    h = m.histogram("latency_s")
+    for v in (0.001, 0.002, 0.004, 0.1):
+        h.observe(v)
+    assert h.count == 4
+    assert h.quantile(0.5) <= h.quantile(0.99)
+    assert h.quantile(0.99) >= 0.05  # p99 lands near the outlier
+    m.counter("reads_submitted").inc(3)
+    text = m.render()
+    assert "reads_submitted 3" in text
+    assert "latency_s_p99" in text
+
+
+def test_prefetcher_propagates_worker_exception():
+    def bad():
+        yield 0, np.zeros((2, 4), np.int8), np.zeros(2, np.int32)
+        raise ValueError("boom")
+
+    pf = pipeline.Prefetcher(bad(), device_put=lambda x: x)
+    it = iter(pf)
+    assert next(it)[0] == 0
+    with pytest.raises(ValueError, match="boom"):
+        next(it)
+    pf.close()
+    assert not pf._t.is_alive()
+
+
+def test_prefetcher_close_mid_stream():
+    def endless():
+        i = 0
+        while True:
+            yield i, np.zeros((1, 4), np.int8), np.ones(1, np.int32)
+            i += 1
+
+    with pipeline.Prefetcher(endless(), device_put=lambda x: x, depth=1) as pf:
+        assert next(iter(pf))[0] == 0
+    deadline = time.monotonic() + 5.0
+    while pf._t.is_alive() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not pf._t.is_alive()  # close() joined the worker
+
+
+def test_strip_gids():
+    rows = [{"gid": 3, "qname": "anything", "tstart": 7}]
+    assert serve_genomics.strip_gids(rows) == [{"qname": "anything",
+                                               "tstart": 7}]
+
+
+def test_offline_online_identical_paf(tmp_path):
+    common = ["--ref-len", "4000", "--reads", "10", "--read-len", "100",
+              "--batch", "4", "--buckets", "128"]
+    p_off, p_on = tmp_path / "off.paf", tmp_path / "on.paf"
+    serve_genomics.main(common + ["--out", str(p_off)])
+    serve_genomics.main(common + ["--online", "--rate", "500",
+                                  "--out", str(p_on)])
+    off, on = p_off.read_text(), p_on.read_text()
+    assert off == on
+    assert off.count("\n") >= 8  # most of the 10 reads mapped
+    assert "gid" not in off  # stripped before write_paf

@@ -1,0 +1,89 @@
+"""`repro.align` dispatch benchmark: the same batch through every backend.
+
+Measures `align_batch` wall time per alignment for each registered
+backend on one shared, seeded input set (`repro.align.inputs`, the same
+generators the conformance suite checks), plus the dispatch layer's
+block-size autotune.  On CPU the Pallas rows run in interpret mode —
+the interesting CPU comparison is `lax` vs `ref`; on TPU/GPU the
+`pallas_dc*` rows are the paper's accelerator claim.
+
+    PYTHONPATH=src python -m benchmarks.run align_dispatch
+    PYTHONPATH=src python benchmarks/align_dispatch.py --smoke --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import align
+from repro.core.genasm import GenASMConfig
+
+try:
+    from .common import aligned_read_batch, row, timeit
+except ImportError:  # script-style: python benchmarks/align_dispatch.py
+    from common import aligned_read_batch, row, timeit
+
+
+def run(*, batch: int, read_len: int, backends=None, iters: int = 3):
+    cfg = GenASMConfig()
+    texts, pats, p_lens, t_lens = aligned_read_batch(
+        batch, read_len, t_extra=2 * cfg.w, seed=29)
+    p_cap = pats.shape[1]
+    args = (jnp.asarray(texts), jnp.asarray(pats), jnp.asarray(p_lens),
+            jnp.asarray(t_lens))
+    backends = backends or align.available_backends()
+    out = {"batch": batch, "read_len": read_len, "p_cap": p_cap,
+           "platform": jax.default_backend(), "backends": {}}
+    base_us = None
+    for name in backends:
+        fn = jax.jit(lambda t, p, pl, tl, _b=name: align.align_batch(
+            t, p, pl, tl, cfg=cfg, backend=_b, p_cap=p_cap))
+        us = timeit(fn, *args, iters=iters)
+        res = fn(*args)
+        dist = np.asarray(res.distance)
+        if name == "lax":
+            base_us = us
+        out["backends"][name] = {
+            "us_per_align": round(us / batch, 2),
+            "aligns_per_s": round(batch / (us / 1e6), 1),
+            "mean_distance": round(float(dist[dist >= 0].mean()), 2),
+        }
+        row(f"align_dispatch_{name}", us / batch,
+            f"aligns_per_s={batch / (us / 1e6):.0f};"
+            f"interpret={align.needs_interpret()}")
+    if base_us is not None:
+        for name, s in out["backends"].items():
+            s["speedup_vs_lax"] = round(base_us / (s["us_per_align"] * batch),
+                                        3)
+    # autotune: exercise the cache path and report the chosen tile
+    bt = align.autotune("pallas_dc", p_cap, cfg.k, batch=batch,
+                        candidates=(16, 64, 128), cfg=cfg)
+    out["autotuned_block_bt"] = bt
+    row("align_dispatch_autotune_block", 0.0,
+        f"block_bt={bt};key=({p_cap},{cfg.k})")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small batch, short reads)")
+    ap.add_argument("--json", default=None, help="write summary JSON here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        out = run(batch=16, read_len=100, iters=2)
+    else:
+        out = run(batch=64, read_len=150)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -12,21 +12,15 @@ from repro.core.oracle import graph_edit_distance
 from repro.core.segram import bitalign, graph
 from repro.genomics import simulate
 
-from .common import row, timeit
+from .common import profile_read_patterns, row, timeit, variant_graph
 
 
 def run(n_nodes: int = 512, read_len: int = 96, batch: int = 8):
-    rng = np.random.default_rng(11)
-    ref = rng.integers(0, 4, size=n_nodes - 24).astype(np.int8)
-    variants = simulate.simulate_variants(ref, n_snp=8, n_ins=4, n_del=4, seed=3)
-    g = graph.build_graph(ref, variants)
+    g, ref = variant_graph(n_nodes, seed=11, n_snp=8, n_ins=4, n_del=4,
+                           ref_margin=24, variant_seed=3)
     m_bits = ((read_len + 63) // 64) * 64
-    pats = np.full((batch, m_bits), 4, np.int8)
-    for i in range(batch):
-        s = int(rng.integers(0, len(ref) - read_len - 4))
-        r = simulate.mutate(ref[s: s + read_len], simulate.ILLUMINA, rng)
-        pats[i, : min(len(r), m_bits)] = r[:m_bits]
-    plens = np.full(batch, read_len, np.int32)
+    pats, plens = profile_read_patterns(ref, batch, read_len, m_bits,
+                                        profile=simulate.ILLUMINA, seed=11)
 
     bases = jnp.asarray(g.bases)
     succ = jnp.asarray(g.succ_bits)

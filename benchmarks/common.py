@@ -1,10 +1,25 @@
-"""Benchmark harness utilities."""
+"""Benchmark harness utilities.
+
+Synthetic-input generation is shared with the conformance tests via
+`repro.align.inputs` (fixed seeds, one source of truth) and re-exported
+here for the benchmark modules.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import numpy as np
+
+from repro.align.inputs import (  # noqa: F401  (re-exports)
+    aligned_read_batch,
+    graph_read_batch,
+    mutated_pair,
+    padded_batch,
+    profile_read_patterns,
+    random_windows,
+    variant_graph,
+)
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -5,17 +5,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 
-from .common import row, timeit
+from .common import graph_read_batch, random_windows, row, timeit
 
 
 def run(batch: int = 256, w: int = 64, k: int = 24):
-    rng = np.random.default_rng(13)
-    texts = rng.integers(0, 4, size=(batch, w)).astype(np.int8)
-    pats = rng.integers(0, 4, size=(batch, w)).astype(np.int8)
+    texts, pats = random_windows(batch, w, seed=13)
 
     kern = jax.jit(lambda t, p: ops.window_dc(t, p, w=w, k=k, block_bt=64))
     us_k = timeit(kern, jnp.asarray(texts), jnp.asarray(pats))
@@ -40,22 +37,8 @@ def run(batch: int = 256, w: int = 64, k: int = 24):
 
 def run_bitalign_kernel(batch: int = 64, n: int = 128, m_bits: int = 64,
                         k: int = 12):
-    from repro.core.segram import graph
-    from repro.genomics import simulate
-
-    rng = np.random.default_rng(17)
-    bases = np.zeros((batch, n), np.int8)
-    succ = np.zeros((batch, n), np.uint32)
-    pats = np.full((batch, m_bits), 4, np.int8)
-    plens = np.full((batch,), m_bits - 16, np.int32)
-    refseq = rng.integers(0, 4, size=n - 12).astype(np.int8)
-    g = graph.build_graph(refseq, simulate.simulate_variants(
-        refseq, n_snp=4, n_ins=2, n_del=2, seed=1))
-    b_, s_ = graph.extract_subgraph(g, 0, n)
-    bases[:], succ[:] = b_, s_
-    for i in range(batch):
-        st = int(rng.integers(0, 40))
-        pats[i, : m_bits - 16] = refseq[st: st + m_bits - 16]
+    bases, succ, pats, plens = graph_read_batch(batch, n, m_bits, k_read=16,
+                                                seed=17, variant_seed=1)
     f = jax.jit(lambda b, s, p, l: ops.bitalign_dc(b, s, p, l, m_bits=m_bits,
                                                    k=k, block_bt=32))
     us = timeit(f, jnp.asarray(bases), jnp.asarray(succ), jnp.asarray(pats),

@@ -12,8 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.align import align_batch
 from repro.core import dp_baseline
-from repro.core.genasm import GenASMConfig, align_batch
+from repro.core.genasm import GenASMConfig
 from repro.genomics import encode, simulate
 
 from .common import row, timeit
@@ -42,7 +43,9 @@ def run(kind: str = "short", batch: int = 32):
     ]
     aps_genasm = None
     for vname, cfg in variants:
-        ga = jax.jit(lambda t, p, pl, tl, c=cfg: align_batch(t, p, pl, tl, cfg=c))
+        ga = jax.jit(lambda t, p, pl, tl, c=cfg: align_batch(t, p, pl, tl,
+                                                             cfg=c,
+                                                             backend="lax"))
         us = timeit(ga, jnp.asarray(texts), jnp.asarray(reads), jnp.asarray(lens),
                     jnp.asarray(t_lens))
         res = ga(jnp.asarray(texts), jnp.asarray(reads), jnp.asarray(lens),

@@ -8,18 +8,45 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bitalign         — Fig 6-15 (BitAlign vs graph-DP / PaSGAL stand-in)
   segram_e2e       — Figs 6-11..6-14 (SeGraM end-to-end mapping)
   kernel_dc        — Ch. 5 BitMAc kernel analysis
+  align_dispatch   — repro.align backend dispatch (lax vs pallas_dc*)
   serve_engine     — micro-batching engine under Poisson arrivals
   roofline         — §Roofline table from the multi-pod dry-run
+
+``--smoke`` runs the CI-sized subset (align_dispatch + serve_engine) and
+``--json PATH`` writes their summaries into one artifact:
+
+    PYTHONPATH=src python benchmarks/run.py --smoke --json bench_summary.json
 """
 from __future__ import annotations
 
+import argparse
 import inspect
+import json
 import sys
 
+if __package__ in (None, ""):  # script-style: python benchmarks/run.py
+    import pathlib
 
-def main() -> None:
-    from . import (bitalign, edit_distance, kernel_dc, prealign_filter,
-                   read_alignment, roofline, segram_e2e, serve_engine)
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    __package__ = "benchmarks"
+
+# modules with a --smoke flag and a summary-dict return (the CI subset)
+SMOKE_MODS = ("align_dispatch", "serve_engine")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single module by name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (align_dispatch + serve_engine)")
+    ap.add_argument("--json", default=None,
+                    help="write collected module summaries here")
+    args = ap.parse_args(argv)
+
+    from . import (align_dispatch, bitalign, edit_distance, kernel_dc,
+                   prealign_filter, read_alignment, roofline, segram_e2e,
+                   serve_engine)
 
     mods = {
         "read_alignment": read_alignment,
@@ -28,23 +55,39 @@ def main() -> None:
         "bitalign": bitalign,
         "segram_e2e": segram_e2e,
         "kernel_dc": kernel_dc,
+        "align_dispatch": align_dispatch,
         "serve_engine": serve_engine,
         "roofline": roofline,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    summaries: dict[str, object] = {}
     print("name,us_per_call,derived")
     for name, mod in mods.items():
-        if only and name != only:
+        if args.only and name != args.only:
+            continue
+        if args.smoke and name not in SMOKE_MODS:
             continue
         try:
             # modules with an argv parameter parse CLI flags; hand them an
-            # empty argv so the harness's own argument doesn't reach argparse
+            # empty argv so the harness's own arguments don't reach argparse
             if "argv" in inspect.signature(mod.main).parameters:
-                mod.main([])
+                out = mod.main(["--smoke"] if args.smoke and
+                               name in SMOKE_MODS else [])
             else:
-                mod.main()
+                out = mod.main()
+            if isinstance(out, dict):
+                summaries[name] = out
         except Exception as e:  # keep the harness running
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            summaries[name] = {"error": f"{type(e).__name__}: {e}"}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summaries, f, indent=2)
+        print(f"wrote {args.json}")
+    errors = [n for n, s in summaries.items()
+              if isinstance(s, dict) and "error" in s]
+    if args.smoke and errors:
+        # the CI smoke step must fail the build, not ship an error artifact
+        sys.exit(f"smoke benchmark(s) failed: {', '.join(errors)}")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,8 @@ def mixed_reads(ref, *, n_short: int, n_long: int, short_len: int,
 def run_engine(index, reads, *, buckets, max_batch, max_delay_s, rate_rps,
                filter_k, warmup_reads, seed):
     cfg = EngineConfig(buckets=buckets, max_batch=max_batch,
-                       max_delay_s=max_delay_s, filter_k=filter_k)
+                       max_delay_s=max_delay_s, filter_k=filter_k,
+                       minimizer_w=8, minimizer_k=12)
     engine = ServeEngine(index, cfg)
     engine.map_all(warmup_reads)  # compile every bucket executor off-clock
     engine.metrics = Metrics()  # measured run starts from clean instruments
@@ -119,6 +120,7 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {args.json}")
+    return out
 
 
 if __name__ == "__main__":

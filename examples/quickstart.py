@@ -1,16 +1,23 @@
 """Quickstart: align one read against a reference with GenASM.
 
+Alignment goes through the `repro.align` backend dispatch — swap
+``backend="lax"`` for ``"pallas_dc"``/``"pallas_dc_v2"`` (the Pallas
+kernels; interpret mode on CPU) or ``"ref"`` (exact DP oracle) and the
+result is identical.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.genasm import GenASMConfig, align
+from repro import align as align_dispatch
+from repro.core.genasm import GenASMConfig
 from repro.genomics.encode import encode
 from repro.genomics.io import cigar_string
 
 REF = "ACGTACGGATTACAGGCATCGTACGATCGTAGCTAGCTTAGGCATCATACGGATTACATTCCGGAA"
 READ = "ACGGATTACAGGCTTCGTACGATCGAGCTAGCTTAGGCAT"  # 1 subst + 1 deletion
+BACKEND = "lax"  # or: ref | pallas_dc | pallas_dc_v2 (see repro.align)
 
 ref = encode(REF)
 read = encode(READ)
@@ -22,8 +29,12 @@ text[: len(ref) - offset] = ref[offset:]
 pat = np.full((p_cap,), 4, np.int8)
 pat[: len(read)] = read
 
-res = align(jnp.asarray(text), jnp.asarray(pat), jnp.int32(len(read)),
-            jnp.int32(len(ref) - offset), cfg=GenASMConfig(), p_cap=p_cap)
-print("edit distance:", int(res.distance))
-print("CIGAR:", cigar_string(np.asarray(res.ops), int(res.n_ops)))
-assert int(res.distance) == 2
+res = align_dispatch.align_batch(
+    jnp.asarray(text)[None], jnp.asarray(pat)[None],
+    jnp.asarray([len(read)], np.int32),
+    jnp.asarray([len(ref) - offset], np.int32),
+    cfg=GenASMConfig(), p_cap=p_cap, backend=BACKEND)
+print("backend:", BACKEND, "of", align_dispatch.available_backends())
+print("edit distance:", int(res.distance[0]))
+print("CIGAR:", cigar_string(np.asarray(res.ops[0]), int(res.n_ops[0])))
+assert int(res.distance[0]) == 2

@@ -16,7 +16,8 @@ index = minimizer_index.build_epoched_index(ref, w=8, k=12)
 rs = simulate.simulate_reads(ref, n_reads=24, read_len=150,
                              profile=simulate.ILLUMINA, seed=2)
 
-config = EngineConfig(buckets=(160, 320), max_batch=8, max_delay_s=0.005)
+config = EngineConfig(buckets=(160, 320), max_batch=8, max_delay_s=0.005,
+                      minimizer_w=8, minimizer_k=12)
 with ServeEngine(index, config) as engine:
     session = Session(engine)
     for gid, read in enumerate(rs.reads):

@@ -1,0 +1,22 @@
+"""Unified alignment backend dispatch (DESIGN.md §9).
+
+    from repro import align
+    res = align.align_batch(texts, patterns, p_lens, t_lens,
+                            cfg=GenASMConfig(), backend="pallas_dc")
+
+Importing the package registers the built-in backends (``ref``, ``lax``,
+``pallas_dc``, ``pallas_dc_v2``).
+"""
+from .api import (  # noqa: F401
+    Backend,
+    align_batch,
+    autotune,
+    available_backends,
+    block_size_for,
+    clear_autotune_cache,
+    get_backend,
+    needs_interpret,
+    register_backend,
+    resolve_backend,
+)
+from . import backends as _builtin_backends  # noqa: F401  (registers them)

@@ -1,0 +1,78 @@
+"""The four built-in alignment backends (registered on import).
+
+Each backend is an adapter from the uniform dispatch signature
+``(texts, patterns, p_lens, t_lens, *, cfg, p_cap, emit_cigar,
+block_bt, interpret)`` to one implementation:
+
+  * ``ref``          — `refdp.align_batch_host` under `jax.pure_callback`
+  * ``lax``          — `core/genasm.align` vmapped (pure-`lax` DC + TB)
+  * ``pallas_dc``    — `batched.batched_kernel_align` on the v1 kernel
+  * ``pallas_dc_v2`` — same, v2 kernel (R-only TB store)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import genasm
+from repro.core.genasm import AlignResult, GenASMConfig
+
+from . import refdp
+from .api import register_backend
+from .batched import batched_kernel_align
+
+
+def _ref_fn(texts, patterns, p_lens, t_lens, *, cfg: GenASMConfig,
+            p_cap: int, emit_cigar: bool, block_bt: int, interpret: bool):
+    del block_bt, interpret  # no kernel underneath
+    b = texts.shape[0]
+    # same ops width as the windowed backends; distances-only mode keeps
+    # the [b, 1] padded shape but still reports the true n_ops (the
+    # traceback is O(n+m), trivial next to the O(nm) DP already paid)
+    cap = cfg.n_windows(p_cap) * 2 * cfg.commit if emit_cigar else 1
+    shapes = (
+        jax.ShapeDtypeStruct((b,), jnp.int32),       # distance
+        jax.ShapeDtypeStruct((b, cap), jnp.int8),    # ops
+        jax.ShapeDtypeStruct((b,), jnp.int32),       # n_ops
+        jax.ShapeDtypeStruct((b,), jnp.int32),       # text_consumed
+        jax.ShapeDtypeStruct((b,), jnp.bool_),       # failed
+    )
+    dist, ops, n_ops, t_used, failed = jax.pure_callback(
+        partial(refdp.align_batch_host, cap=cap), shapes,
+        texts, patterns, p_lens, t_lens, vmap_method="sequential")
+    return AlignResult(distance=dist, ops=ops, n_ops=n_ops,
+                       text_consumed=t_used, failed=failed)
+
+
+def _lax_fn(texts, patterns, p_lens, t_lens, *, cfg: GenASMConfig,
+            p_cap: int, emit_cigar: bool, block_bt: int, interpret: bool):
+    del block_bt, interpret  # no kernel underneath
+    f = partial(genasm.align, cfg=cfg, p_cap=p_cap, emit_cigar=emit_cigar)
+    return jax.vmap(f)(texts, patterns, p_lens, t_lens)
+
+
+def _pallas_fn(texts, patterns, p_lens, t_lens, *, cfg: GenASMConfig,
+               p_cap: int, emit_cigar: bool, block_bt: int, interpret: bool,
+               store_r: bool):
+    return batched_kernel_align(
+        texts, patterns, p_lens, t_lens, cfg=cfg, p_cap=p_cap,
+        emit_cigar=emit_cigar, store_r=store_r, block_bt=block_bt,
+        interpret=interpret)
+
+
+register_backend(
+    "ref", _ref_fn,
+    description="host numpy DP oracle with traceback (exact; test ground "
+                "truth, never a production path)")
+register_backend(
+    "lax", _lax_fn,
+    description="pure-jax.lax windowed GenASM (CPU default)")
+register_backend(
+    "pallas_dc", partial(_pallas_fn, store_r=False), uses_pallas=True,
+    description="Pallas GenASM-DC kernel, M/I/D TB store (paper-faithful)")
+register_backend(
+    "pallas_dc_v2", partial(_pallas_fn, store_r=True), uses_pallas=True,
+    description="Pallas GenASM-DC v2 kernel, R-only TB store (3x less TB "
+                "traffic)")

@@ -10,7 +10,10 @@ from repro.core.genasm import GenASMConfig
 
 @dataclass(frozen=True)
 class GenASMServiceConfig:
-    genasm: GenASMConfig = GenASMConfig(w=64, o=24, k=24, use_kernel=True)
+    genasm: GenASMConfig = GenASMConfig(w=64, o=24, k=24)
+    # repro.align registry name; "auto" = Pallas on TPU/GPU, lax on CPU —
+    # matching the resolution policy of the live entry points
+    align_backend: str = "auto"
     read_cap: int = 10_240          # long reads (paper: 10 kbp)
     short_read_cap: int = 256       # Illumina use case
     filter_bits: int = 128

@@ -23,13 +23,17 @@ from . import genasm_dc
 
 
 class GenASMConfig(NamedTuple):
-    """Window geometry (paper defaults W=64, O=24, k_window=O)."""
+    """Window geometry (paper defaults W=64, O=24, k_window=O).
+
+    Backend selection (pure-lax vs the Pallas kernels) is *not* part of
+    this config — it belongs to `repro.align`'s dispatch layer, which
+    keys its executor/autotune caches on the backend name separately.
+    """
 
     w: int = 64
     o: int = 24
     k: int = 24
     affine: bool = True
-    use_kernel: bool = False  # Pallas DC kernel instead of the pure-JAX path
     store_r: bool = False  # v2 TB store: R rows only (3× less TB traffic)
 
     @property
@@ -66,6 +70,30 @@ def pad_text(text: jnp.ndarray, t_len, cap: int, cfg: GenASMConfig):
     return jnp.where(idx < t_len, buf, SENTINEL).astype(jnp.int8)
 
 
+def window_commit(carry, *, d_min, pc, tc, err, n_ops, stuck, p_len, k):
+    """Advance the window-scan carry by one DC+TB window's outcome.
+
+    The single source of the commit rules (fail/stall masking, advance
+    gating, completion): both the per-alignment scan here and the
+    batched kernel driver in `repro.align.batched` call this, which is
+    what makes their outputs bit-identical.  All operands may be scalars
+    (per-lane under vmap) or ``[B]`` vectors — the logic broadcasts.
+
+    Returns ``(new_carry, n_emit)`` where ``n_emit`` is the number of
+    CIGAR ops this window actually contributes (0 for done/failed lanes).
+    """
+    cur_p, cur_t, dist, failed, done = carry
+    win_fail = d_min > k
+    this_fail = (win_fail | stuck) & (~done)
+    adv_p = jnp.where(done | this_fail, 0, pc)
+    adv_t = jnp.where(done | this_fail, 0, tc)
+    n_emit = jnp.where(done | this_fail, 0, n_ops)
+    dist = dist + jnp.where(done | this_fail, 0, err)
+    new_done = done | this_fail | (cur_p + adv_p >= p_len)
+    return (cur_p + adv_p, cur_t + adv_t, dist, failed | this_fail,
+            new_done), n_emit
+
+
 @partial(jax.jit, static_argnames=("cfg", "p_cap", "emit_cigar"))
 def align(
     text: jnp.ndarray,
@@ -92,26 +120,16 @@ def align(
     pat = pad_pattern(pattern, p_len, p_cap, cfg)
     txt = pad_text(text, t_len, p_cap + n_win * cfg.commit, cfg)
 
-    if cfg.use_kernel:
-        from repro.kernels import ops as kops
-
-        if cfg.store_r:
-            dc_fn = lambda st, sp: kops.window_dc_v2(st[None], sp[None], w=w,
-                                                     k=k, squeeze=True)
-        else:
-            dc_fn = lambda st, sp: kops.window_dc(st[None], sp[None], w=w, k=k,
-                                                  squeeze=True)
-    elif cfg.store_r:
+    if cfg.store_r:
         dc_fn = lambda st, sp: genasm_dc.window_dc_r(st, sp, w=w, k=k)
     else:
         dc_fn = lambda st, sp: genasm_dc.window_dc(st, sp, w=w, k=k)
 
     def window_step(carry, _):
-        cur_p, cur_t, dist, failed, done = carry
+        cur_p, cur_t = carry[0], carry[1]
         sub_p = lax.dynamic_slice(pat, (cur_p,), (w,))
         sub_t = lax.dynamic_slice(txt, (cur_t,), (w,))
         d_min, tb = dc_fn(sub_t, sub_p)
-        win_fail = d_min > k
         cap_p = jnp.minimum(jnp.int32(cfg.commit), p_len - cur_p)
         if cfg.store_r:
             from .bitvector import pattern_bitmasks
@@ -125,14 +143,10 @@ def align(
             pc, tc, err, ops, n_ops, stuck = window_tb(
                 tb, jnp.minimum(d_min, k), cap_p, w=w, o=o, k=k,
                 affine=cfg.affine)
-        this_fail = (win_fail | stuck) & (~done)
-        adv_p = jnp.where(done | this_fail, 0, pc)
-        adv_t = jnp.where(done | this_fail, 0, tc)
-        n_emit = jnp.where(done | this_fail, 0, n_ops)
-        dist = dist + jnp.where(done | this_fail, 0, err)
-        new_done = done | this_fail | (cur_p + adv_p >= p_len)
-        out = (ops, n_emit)
-        return (cur_p + adv_p, cur_t + adv_t, dist, failed | this_fail, new_done), out
+        new_carry, n_emit = window_commit(
+            carry, d_min=d_min, pc=pc, tc=tc, err=err, n_ops=n_ops,
+            stuck=stuck, p_len=p_len, k=k)
+        return new_carry, (ops, n_emit)
 
     init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.asarray(False), p_len <= 0)
     (fin_p, fin_t, dist, failed, done), (ops_w, n_ops_w) = lax.scan(

@@ -2,8 +2,11 @@
 
 Seed-and-extend: MinSeed-style minimizer seeding → GenASM-DC pre-alignment
 filter over candidates → windowed GenASM DC+TB alignment of the best
-candidate.  The full per-read pipeline is one jitted function; batches
-vmap and the launcher shards reads over ``("pod", "data")`` with the
+candidate.  Seeding + filtering is one jitted, vmapped stage
+(:func:`seed_and_filter_batch`); the alignment stage is dispatched
+through `repro.align.align_batch`, so every registered backend (pure
+``lax``, the Pallas kernels, the ``ref`` oracle) drives the same
+pipeline — the launcher shards reads over ``("pod", "data")`` with the
 minimizer index replicated or sharded over ``"model"`` (DESIGN.md §5).
 """
 from __future__ import annotations
@@ -13,12 +16,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .bitvector import SENTINEL, WILDCARD
-from .genasm import GenASMConfig, align
+from .genasm import GenASMConfig
 from .genasm_dc import bitap_search
-from .minimizer_index import ReferenceIndex, build_reference_index
+from .minimizer_index import ReferenceIndex, build_reference_index  # noqa: F401
 from .segram.minimizer import seed_candidates
 
 
@@ -30,27 +32,27 @@ class MapResult(NamedTuple):
     failed: jnp.ndarray
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "cfg", "p_cap", "filter_bits", "filter_k", "max_candidates",
-        "minimizer_w", "minimizer_k",
-    ),
-)
-def map_read(
+class SeedFilterResult(NamedTuple):
+    position: jnp.ndarray  # int32 best candidate start (filter-refined)
+    prefilter_ok: jnp.ndarray  # bool — candidate survived the filter
+    text: jnp.ndarray  # [t_cap] int8 reference region at position
+    t_len: jnp.ndarray  # int32 valid text length
+    pattern: jnp.ndarray  # [p_cap] int8 wildcard-padded read
+
+
+def _seed_and_filter_one(
     index: ReferenceIndex,
     read: jnp.ndarray,
     read_len,
     *,
-    cfg: GenASMConfig = GenASMConfig(),
-    p_cap: int = 256,
-    filter_bits: int = 128,
-    filter_k: int = 12,
-    max_candidates: int = 4,
-    minimizer_w: int = 10,
-    minimizer_k: int = 15,
-) -> MapResult:
-    """Map one read against the indexed reference."""
+    p_cap: int,
+    t_cap: int,
+    filter_bits: int,
+    filter_k: int,
+    max_candidates: int,
+    minimizer_w: int,
+    minimizer_k: int,
+) -> SeedFilterResult:
     starts, votes = seed_candidates(
         read,
         index.hashes,
@@ -63,7 +65,6 @@ def map_read(
     # candidate starts are diagonal-bucketed to 32 (minimizer voting), so the
     # filter window must absorb bucket quantization + k edits of drift
     margin = filter_k + 32
-    t_cap = p_cap + cfg.w * 2
 
     # --- pre-alignment filter (use case 2): exact distance of the read's
     # first filter_bits bases against each candidate region prefix.
@@ -88,7 +89,6 @@ def map_read(
     pos = fpos[best]
     prefilter_ok = fd[best] <= filter_k
 
-    # --- alignment (use case 1): windowed GenASM at the filtered position.
     text = jax.lax.dynamic_slice(
         jnp.concatenate([index.ref, jnp.full((t_cap,), SENTINEL, jnp.int8)]),
         (pos,), (t_cap,),
@@ -97,11 +97,69 @@ def map_read(
     if r.shape[0] < p_cap:
         r = jnp.pad(r, (0, p_cap - r.shape[0]), constant_values=WILDCARD)
     pat = jnp.where(jnp.arange(p_cap) < read_len, r, WILDCARD).astype(jnp.int8)
-    res = align(text, pat, read_len.astype(jnp.int32),
-                jnp.minimum(L - pos, t_cap).astype(jnp.int32), cfg=cfg, p_cap=p_cap)
-    failed = res.failed | (~prefilter_ok)
+    return SeedFilterResult(
+        position=pos.astype(jnp.int32),
+        prefilter_ok=prefilter_ok,
+        text=text,
+        t_len=jnp.minimum(L - pos, t_cap).astype(jnp.int32),
+        pattern=pat,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "p_cap", "t_cap", "filter_bits", "filter_k", "max_candidates",
+        "minimizer_w", "minimizer_k",
+    ),
+)
+def seed_and_filter_batch(index, reads, read_lens, *, p_cap, t_cap,
+                          filter_bits, filter_k, max_candidates,
+                          minimizer_w, minimizer_k) -> SeedFilterResult:
+    """Vmapped seeding + pre-alignment filtering (one jit per shape)."""
+    f = partial(
+        _seed_and_filter_one, index, p_cap=p_cap, t_cap=t_cap,
+        filter_bits=filter_bits, filter_k=filter_k,
+        max_candidates=max_candidates, minimizer_w=minimizer_w,
+        minimizer_k=minimizer_k)
+    return jax.vmap(f)(reads, read_lens)
+
+
+def map_batch(
+    index: ReferenceIndex,
+    reads: jnp.ndarray,
+    read_lens: jnp.ndarray,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    max_candidates: int = 4,
+    minimizer_w: int = 10,
+    minimizer_k: int = 15,
+    backend: str | None = None,
+    block_bt: int | None = None,
+) -> MapResult:
+    """Map a read batch against the indexed reference.
+
+    ``backend`` selects the alignment implementation by registry name
+    (`repro.align`); None/"auto" resolves per platform.
+    """
+    from repro import align as align_dispatch
+
+    t_cap = p_cap + cfg.w * 2
+    sf = seed_and_filter_batch(
+        index, reads, read_lens.astype(jnp.int32), p_cap=p_cap, t_cap=t_cap,
+        filter_bits=filter_bits, filter_k=filter_k,
+        max_candidates=max_candidates, minimizer_w=minimizer_w,
+        minimizer_k=minimizer_k)
+
+    res = align_dispatch.align_batch(
+        sf.text, sf.pattern, read_lens.astype(jnp.int32), sf.t_len,
+        cfg=cfg, backend=backend, p_cap=p_cap, block_bt=block_bt)
+    failed = res.failed | (~sf.prefilter_ok)
     return MapResult(
-        position=jnp.where(failed, -1, pos).astype(jnp.int32),
+        position=jnp.where(failed, -1, sf.position).astype(jnp.int32),
         distance=jnp.where(failed, -1, res.distance),
         ops=res.ops,
         n_ops=res.n_ops,
@@ -109,6 +167,8 @@ def map_read(
     )
 
 
-def map_batch(index: ReferenceIndex, reads, read_lens, **kw):
-    f = partial(map_read, index, **kw)
-    return jax.vmap(f)(reads, read_lens)
+def map_read(index: ReferenceIndex, read: jnp.ndarray, read_len, **kw
+             ) -> MapResult:
+    """Map one read (batch-of-one convenience wrapper)."""
+    res = map_batch(index, read[None], jnp.asarray(read_len)[None], **kw)
+    return jax.tree_util.tree_map(lambda x: x[0], res)

@@ -7,6 +7,11 @@ batches, and places them as globally-sharded arrays over the ("pod",
 (batch cursor, results offset) checkpoint, and straggler mitigation is
 work-stealing over unclaimed batch ids (fault.py).  A double-buffered
 prefetch thread overlaps host encode with device compute.
+
+:func:`map_stream` closes the loop: it drives each prefetched batch
+through `core/mapper.map_batch`, whose alignment stage dispatches via
+`repro.align` — so the offline pipeline runs on any registered backend
+(``lax``, ``pallas_dc``, ``pallas_dc_v2``) with one argument.
 """
 from __future__ import annotations
 
@@ -113,3 +118,18 @@ class Prefetcher:
 
     def __exit__(self, *exc):
         self.close()
+
+
+def map_stream(index, batches, *, backend: str | None = None, **map_kw
+               ) -> Iterator[tuple[int, object]]:
+    """Map every (batch_id, reads, lens) triple; yields (batch_id, MapResult).
+
+    ``batches`` is any iterator in the `ReadBatches`/`Prefetcher` shape.
+    ``backend`` names a `repro.align` registry entry (None/"auto" picks
+    the platform default); remaining kwargs forward to
+    `mapper.map_batch` (p_cap, filter_k, ...).
+    """
+    from repro.core import mapper
+
+    for b, arr, lens in batches:
+        yield b, mapper.map_batch(index, arr, lens, backend=backend, **map_kw)

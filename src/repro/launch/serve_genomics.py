@@ -98,8 +98,12 @@ def main(argv=None):
     ap.add_argument("--out", default=None, help="PAF output path")
     ap.add_argument("--lease-s", type=float, default=600.0,
                     help="work-queue lease; expired leases are stolen")
+    ap.add_argument("--align-backend", default="auto",
+                    help="repro.align backend: auto|ref|lax|pallas_dc|"
+                         "pallas_dc_v2 (auto = Pallas on TPU/GPU, lax on "
+                         "CPU; env REPRO_ALIGN_BACKEND overrides auto)")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="Pallas GenASM-DC kernel path")
+                    help="deprecated alias for --align-backend pallas_dc")
     ap.add_argument("--online", action="store_true",
                     help="open-loop Poisson arrivals instead of the "
                          "offline work-queue drain")
@@ -121,10 +125,16 @@ def main(argv=None):
     need = ((args.read_len + 63) // 64) * 64 + 64  # offline driver's old cap
     if max(buckets) < need:  # never trim reads the single-cap path held
         buckets += (need,)
+    if args.use_kernel and args.align_backend != "auto":
+        ap.error("--use-kernel is a deprecated alias for --align-backend "
+                 "pallas_dc; don't combine it with an explicit "
+                 "--align-backend")
+    backend = "pallas_dc" if args.use_kernel else args.align_backend
     cfg = EngineConfig(
         buckets=buckets, max_batch=args.batch,
         max_delay_s=args.max_delay_ms / 1e3,
-        genasm=GenASMConfig(use_kernel=args.use_kernel),
+        genasm=GenASMConfig(),
+        align_backend=backend,
         filter_k=max(8, int(args.read_len * prof.error_rate * 1.5)),
         minimizer_w=8, minimizer_k=12)
 
@@ -132,6 +142,7 @@ def main(argv=None):
     shard_ids = np.arange(pi, args.reads, pc)  # this host's disjoint slice
 
     with ServeEngine(epi, cfg) as engine:
+        print(f"align backend: {engine.align_backend}")
         t0 = time.time()
         if args.online:
             rows, rep = _run_online(engine, rs.reads, shard_ids,

@@ -14,9 +14,12 @@ Two wastes of the offline driver are removed here:
   bases actually paid per bucket (benchmarks/serve_engine.py quantifies
   the win vs single-cap batching).
 * **Recompile waste** — `mapper.map_batch` is shape-specialized, so each
-  ``(bucket_cap, config)`` pair jits exactly once into an *executor
-  cache*; partial flushes are padded up to ``max_batch`` rows to keep one
-  trace per bucket (``trace_counts`` makes this assertable in tests).
+  ``(bucket_cap, align_backend, config)`` triple jits exactly once into
+  an *executor cache*; partial flushes are padded up to ``max_batch``
+  rows to keep one trace per bucket (``trace_counts`` makes this
+  assertable in tests).  Alignment inside the executor flows through
+  `repro.align.align_batch`, so the engine serves any registered
+  backend (``lax``, ``pallas_dc``, ``pallas_dc_v2``, …) unchanged.
 
 Results are memoized in an LRU keyed on ``(read digest, index epoch)``
 (`cache.py`); refreshing the reference through ``EpochedIndex`` bumps the
@@ -27,6 +30,7 @@ makes their PAF outputs bit-identical.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from concurrent.futures import Future
@@ -53,17 +57,24 @@ class EngineConfig:
     bitvector layout, DESIGN.md §7); reads longer than the top rung are
     trimmed to it, matching `encode.batch_reads`.  ``filter_bits`` is
     clamped per bucket to the bucket cap so narrow buckets stay legal.
+    ``align_backend`` names a `repro.align` registry entry ("auto"
+    resolves per platform at engine construction); it is part of the
+    executor-cache key, so switching backends never reuses a stale
+    compiled executor.
     """
 
     buckets: tuple[int, ...] = (160, 320, 640, 1280)
     max_batch: int = 32
     max_delay_s: float = 0.005
     genasm: GenASMConfig = GenASMConfig()
+    align_backend: str = "auto"
     filter_bits: int = 128
     filter_k: int = 12
     max_candidates: int = 4
-    minimizer_w: int = 8
-    minimizer_k: int = 12
+    # defaults match build_reference_index/build_epoched_index and
+    # mapper.map_batch, so all-defaults construction is consistent
+    minimizer_w: int = 10
+    minimizer_k: int = 15
     cache_capacity: int = 4096  # 0 disables the result cache
 
     def __post_init__(self):
@@ -129,6 +140,12 @@ class ServeEngine:
                     f"k={config.minimizer_k}; hashes would never match")
         self.index = index
         self.config = config
+        # resolve "auto" once: the executor-cache key and every flush use
+        # the same concrete backend for the engine's whole lifetime
+        from repro import align as align_dispatch
+
+        self.align_backend = align_dispatch.resolve_backend(
+            config.align_backend).name
         self.metrics = metrics or Metrics()
         self.cache = ResultCache(config.cache_capacity)
         self._queues: dict[int, list[_Request]] = {c: [] for c in config.buckets}
@@ -223,16 +240,28 @@ class ServeEngine:
     # ----------------------------------------------------- executor cache ----
     def _executor_key(self, cap: int) -> tuple:
         c = self.config
-        return (cap, c.genasm, min(c.filter_bits, cap), c.filter_k,
-                c.max_candidates, c.minimizer_w, c.minimizer_k, c.max_batch)
+        return (cap, self.align_backend, c.genasm, min(c.filter_bits, cap),
+                c.filter_k, c.max_candidates, c.minimizer_w, c.minimizer_k,
+                c.max_batch)
 
     def _executor(self, cap: int):
-        """One jitted ``map_batch`` per (bucket_cap, config) — built lazily."""
+        """One jitted ``map_batch`` per (bucket_cap, backend, config) —
+        built lazily."""
         key = self._executor_key(cap)
         fn = self._executors.get(key)
         if fn is None:
             c = self.config
             fbits = min(c.filter_bits, cap)
+            backend = self.align_backend
+            if os.environ.get("REPRO_ALIGN_AUTOTUNE") == "1":
+                # tune eagerly before jitting: under the executor's trace
+                # align_batch only *consults* the block cache (it cannot
+                # time candidates on tracers)
+                from repro import align as align_dispatch
+
+                if align_dispatch.get_backend(backend).uses_pallas:
+                    align_dispatch.autotune(backend, cap, c.genasm.k,
+                                            batch=c.max_batch, cfg=c.genasm)
 
             def run(index, arr, lens, _cap=cap):
                 # body executes at trace time only → counts retraces
@@ -241,7 +270,8 @@ class ServeEngine:
                     index, arr, lens, cfg=c.genasm, p_cap=_cap,
                     filter_bits=fbits, filter_k=c.filter_k,
                     max_candidates=c.max_candidates,
-                    minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k)
+                    minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
+                    backend=backend)
 
             fn = jax.jit(run)
             self._executors[key] = fn

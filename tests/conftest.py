@@ -21,14 +21,6 @@ def rng():
 
 
 def mutate_seq(seq, n_sub, n_ins, n_del, rng):
-    s = list(seq)
-    for _ in range(n_sub):
-        i = rng.integers(0, len(s))
-        s[i] = (s[i] + rng.integers(1, 4)) % 4
-    for _ in range(n_ins):
-        i = rng.integers(0, len(s) + 1)
-        s.insert(i, int(rng.integers(0, 4)))
-    for _ in range(n_del):
-        i = rng.integers(0, len(s))
-        del s[i]
-    return np.array(s, np.int8)
+    from repro.align.inputs import mutate
+
+    return mutate(seq, int(n_sub), int(n_ins), int(n_del), rng)

@@ -1,0 +1,231 @@
+"""Cross-backend conformance suite for `repro.align` (DESIGN.md §9).
+
+Differential testing in the Alser et al. sense: every registered backend
+runs the same inputs and must agree — `ref` (exact DP oracle with
+traceback) against `core/oracle`, and the windowed backends (`lax`,
+`pallas_dc`, `pallas_dc_v2`) bit-for-bit against each other, with every
+emitted CIGAR validated by `core/oracle.check_cigar`.
+
+Distance-vs-oracle tiers (windowed GenASM is greedy per window):
+
+  * substitution-only injections — *exact* equality (pinned empirically
+    over 900 seeds across all geometries below);
+  * mixed substitution/indel injections — oracle ≤ reported ≤ oracle + 3
+    when the aligner succeeds (the paper's §4.10.2 slack), CIGAR always
+    internally consistent.
+
+``REPRO_ALIGN_BACKEND`` (the CI matrix knob) narrows the parametrized
+backend list to one name.  Shapes are held static per config so each
+(backend, cfg) pair compiles once; raggedness lives in the length
+arrays (sentinel-padded tails), not the shapes.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import align
+from repro.align import inputs
+from repro.core import oracle
+from repro.core.genasm import GenASMConfig
+
+# k ∈ {0, 4, 24} × W ∈ {32, 64} (o pinned to keep commit = w - o positive)
+CONFIGS = {
+    "w32_k0": GenASMConfig(w=32, o=8, k=0),
+    "w32_k4": GenASMConfig(w=32, o=8, k=4),
+    "w32_k24": GenASMConfig(w=32, o=24, k=24),
+    "w64_k0": GenASMConfig(w=64, o=24, k=0),
+    "w64_k4": GenASMConfig(w=64, o=16, k=4),
+    "w64_k24": GenASMConfig(w=64, o=24, k=24),
+}
+P_CAP, T_CAP = 160, 224  # one static shape → one compile per (backend, cfg)
+
+_env = os.environ.get("REPRO_ALIGN_BACKEND")
+BACKENDS = (_env,) if _env else align.available_backends()
+WINDOWED = tuple(b for b in BACKENDS if b != "ref")
+
+
+def _run(backend, cfg, texts, pats, p_lens, t_lens, block_bt=None):
+    return align.align_batch(
+        jnp.asarray(texts), jnp.asarray(pats), jnp.asarray(p_lens),
+        jnp.asarray(t_lens), cfg=cfg, backend=backend, p_cap=P_CAP,
+        block_bt=block_bt)
+
+
+def _check_cigars(res, pairs, backend):
+    dist = np.asarray(res.distance)
+    ops = np.asarray(res.ops)
+    n_ops = np.asarray(res.n_ops)
+    for i, (pattern, text) in enumerate(pairs):
+        if dist[i] < 0:
+            continue
+        err = oracle.check_cigar(ops[i], int(n_ops[i]), pattern, text,
+                                 int(dist[i]))
+        assert err is None, f"{backend}: pair {i}: {err}"
+
+
+def _ragged_pairs(rng, *, n_sub, n_ins, n_del, n_pairs=5):
+    """Ragged lengths (including a length well below one window)."""
+    pairs = []
+    for _ in range(n_pairs):
+        m = int(rng.integers(12, P_CAP - 24))
+        pairs.append(inputs.mutated_pair(
+            rng, m, n_sub=min(n_sub, m // 4), n_ins=n_ins, n_del=n_del,
+            t_extra=40))
+    return pairs
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("cfg_name", sorted(CONFIGS))
+def test_subs_only_distance_exact(backend, cfg_name, rng):
+    """Substitution-only injections: distance == DP oracle, CIGAR valid."""
+    cfg = CONFIGS[cfg_name]
+    pairs = _ragged_pairs(rng, n_sub=cfg.k, n_ins=0, n_del=0)
+    texts, pats, p_lens, t_lens = inputs.padded_batch(pairs, P_CAP, T_CAP)
+    res = _run(backend, cfg, texts, pats, p_lens, t_lens)
+    dist = np.asarray(res.distance)
+    for i, (pattern, text) in enumerate(pairs):
+        want = oracle.levenshtein_prefix(pattern, text)
+        assert dist[i] == want, f"pair {i}: want {want} got {dist[i]}"
+    _check_cigars(res, pairs, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_indel_mix_within_slack(backend, rng):
+    """Mixed sub/indel injections: bounded slack, CIGAR always consistent."""
+    cfg = CONFIGS["w64_k24"]
+    pairs = _ragged_pairs(rng, n_sub=3, n_ins=2, n_del=2, n_pairs=6)
+    texts, pats, p_lens, t_lens = inputs.padded_batch(pairs, P_CAP, T_CAP)
+    res = _run(backend, cfg, texts, pats, p_lens, t_lens)
+    dist = np.asarray(res.distance)
+    for i, (pattern, text) in enumerate(pairs):
+        want = oracle.levenshtein_prefix(pattern, text)
+        if backend == "ref":
+            assert dist[i] == want
+        else:
+            assert dist[i] >= 0, f"pair {i} failed with only 7 edits"
+            assert want <= dist[i] <= want + 3, \
+                f"pair {i}: oracle {want} got {dist[i]}"
+    _check_cigars(res, pairs, backend)
+
+
+@pytest.mark.parametrize("cfg_name", ["w32_k4", "w64_k24"])
+def test_windowed_backends_bit_identical(cfg_name, rng):
+    """lax and pallas_dc* must agree bit-for-bit on every output field
+    (the kernels compute the same function; dispatch must not perturb it)."""
+    if len(WINDOWED) < 2:
+        pytest.skip("matrix run pins a single backend")
+    cfg = CONFIGS[cfg_name]
+    pairs = _ragged_pairs(rng, n_sub=2, n_ins=1, n_del=1, n_pairs=6)
+    texts, pats, p_lens, t_lens = inputs.padded_batch(pairs, P_CAP, T_CAP)
+    base = _run("lax", cfg, texts, pats, p_lens, t_lens)
+    for backend in WINDOWED:
+        if backend == "lax":
+            continue
+        got = _run(backend, cfg, texts, pats, p_lens, t_lens, block_bt=4)
+        for field in ("distance", "ops", "n_ops", "text_consumed", "failed"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(base, field)),
+                np.asarray(getattr(got, field)),
+                err_msg=f"{backend}.{field} diverges from lax")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_property_differential_random_edits(data):
+    """Property: for random (k, W, edit-mix) draws all backends agree on
+    distance, and windowed distance is oracle-exact for subs-only draws."""
+    seed = data.draw(st.integers(0, 2 ** 31))
+    rng = np.random.default_rng(seed)
+    cfg = CONFIGS["w64_k24" if data.draw(st.integers(0, 1)) else "w32_k24"]
+    n_sub = data.draw(st.integers(0, 4))
+    indels = data.draw(st.integers(0, 1))  # 0 → subs-only (exact tier)
+    n_ins = data.draw(st.integers(0, 2)) * indels
+    n_del = data.draw(st.integers(0, 2)) * indels
+    pairs = _ragged_pairs(rng, n_sub=n_sub, n_ins=n_ins, n_del=n_del,
+                          n_pairs=3)
+    texts, pats, p_lens, t_lens = inputs.padded_batch(pairs, P_CAP, T_CAP)
+    results = {b: _run(b, cfg, texts, pats, p_lens, t_lens) for b in BACKENDS}
+    if "lax" in results:
+        base = results["lax"]
+        for b in WINDOWED:
+            np.testing.assert_array_equal(
+                np.asarray(base.distance), np.asarray(results[b].distance),
+                err_msg=f"{b} distance diverges from lax")
+            np.testing.assert_array_equal(
+                np.asarray(base.ops), np.asarray(results[b].ops),
+                err_msg=f"{b} ops diverge from lax")
+    for b, res in results.items():
+        _check_cigars(res, pairs, b)
+        if indels == 0 or b == "ref":
+            dist = np.asarray(res.distance)
+            for i, (pattern, text) in enumerate(pairs):
+                assert dist[i] == oracle.levenshtein_prefix(pattern, text)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_align_batch_succeeds_on_cpu(backend):
+    """Regression (dispatch platform fallback): the Pallas kernels used to
+    die with an opaque Mosaic lowering error when invoked on CPU without
+    ``interpret=True``; dispatch must detect the platform and fall back,
+    so plain align_batch works everywhere for every backend."""
+    rng = np.random.default_rng(0)
+    pairs = [inputs.mutated_pair(rng, 40, n_sub=1)]
+    texts, pats, p_lens, t_lens = inputs.padded_batch(pairs, 64, 96)
+    res = align.align_batch(
+        jnp.asarray(texts), jnp.asarray(pats), jnp.asarray(p_lens),
+        jnp.asarray(t_lens), cfg=GenASMConfig(), backend=backend, p_cap=64)
+    assert int(np.asarray(res.distance)[0]) == 1
+
+
+def test_emit_cigar_false_uniform_across_backends(rng):
+    """Distances-only mode: every backend returns the same distances, the
+    same [B, 1] padded ops shape, and the same n_ops it reports with
+    CIGARs on (the AlignResult contract must not vary per backend)."""
+    pairs = _ragged_pairs(rng, n_sub=2, n_ins=0, n_del=0, n_pairs=3)
+    texts, pats, p_lens, t_lens = inputs.padded_batch(pairs, P_CAP, T_CAP)
+    args = (jnp.asarray(texts), jnp.asarray(pats), jnp.asarray(p_lens),
+            jnp.asarray(t_lens))
+    want = [oracle.levenshtein_prefix(p, t) for p, t in pairs]
+    for backend in BACKENDS:
+        res = align.align_batch(*args, cfg=CONFIGS["w64_k24"],
+                                backend=backend, p_cap=P_CAP,
+                                emit_cigar=False)
+        assert res.ops.shape == (len(pairs), 1), backend
+        np.testing.assert_array_equal(np.asarray(res.distance), want,
+                                      err_msg=backend)
+        full = align.align_batch(*args, cfg=CONFIGS["w64_k24"],
+                                 backend=backend, p_cap=P_CAP)
+        np.testing.assert_array_equal(
+            np.asarray(res.n_ops), np.asarray(full.n_ops),
+            err_msg=f"{backend}: n_ops diverges between cigar modes")
+
+
+def test_resolve_backend_env_and_auto(monkeypatch):
+    monkeypatch.delenv("REPRO_ALIGN_BACKEND", raising=False)
+    auto = align.resolve_backend(None).name
+    assert auto in align.available_backends()
+    if align.needs_interpret():  # CPU container: lax is the auto default
+        assert auto == "lax"
+    monkeypatch.setenv("REPRO_ALIGN_BACKEND", "pallas_dc_v2")
+    assert align.resolve_backend("auto").name == "pallas_dc_v2"
+    # explicit name beats the env var
+    assert align.resolve_backend("ref").name == "ref"
+    with pytest.raises(ValueError, match="unknown align backend"):
+        align.get_backend("nope")
+
+
+def test_autotune_cache_keyed_on_site():
+    align.clear_autotune_cache()
+    bt = align.autotune("pallas_dc", 64, 4, batch=16, candidates=(8, 16),
+                        cfg=GenASMConfig(w=32, o=8, k=4))
+    assert bt in (8, 16)
+    # cached: block_size_for returns the tuned value for the same site,
+    # heuristic for a different one
+    assert align.block_size_for("pallas_dc", 64, 4, batch=999) == bt
+    assert align.block_size_for("pallas_dc", 128, 4, batch=16) == 16
+    # non-pallas backends pin the heuristic without timing anything
+    assert align.autotune("lax", 64, 4, batch=16) == 16
+    align.clear_autotune_cache()

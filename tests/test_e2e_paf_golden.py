@@ -1,0 +1,50 @@
+"""Golden end-to-end regression: serve_genomics PAF output is byte-stable.
+
+Runs the full service driver (simulate → index → engine → PAF) on a
+fixed-seed read set and asserts the written PAF is byte-identical to the
+snapshot in ``tests/data/serve_golden.paf`` — across the offline
+WorkQueue drain and the ``--online`` Poisson path, and across the
+``lax`` and ``pallas_dc*`` backends (interpret mode on CPU).  Any
+divergence between backends, or any accidental change to mapping
+results, shows up as a diff against one committed file.
+
+Regenerate the snapshot (after an *intentional* output change) with:
+
+    PYTHONPATH=src python -m repro.launch.serve_genomics \
+        --ref-len 3000 --reads 10 --read-len 100 --batch 4 \
+        --buckets 128 --align-backend lax --out tests/data/serve_golden.paf
+"""
+import pathlib
+
+import pytest
+
+from repro.launch import serve_genomics
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "serve_golden.paf"
+BASE_ARGS = [
+    "--ref-len", "3000", "--reads", "10", "--read-len", "100",
+    "--batch", "4", "--buckets", "128",
+]
+
+
+def _run_paf(tmp_path, backend: str, *, online: bool = False) -> bytes:
+    out = tmp_path / f"{backend}{'_online' if online else ''}.paf"
+    argv = BASE_ARGS + ["--align-backend", backend, "--out", str(out)]
+    if online:
+        argv += ["--online", "--rate", "2000"]
+    serve_genomics.main(argv)
+    return out.read_bytes()
+
+
+@pytest.mark.parametrize("backend", ["lax", "pallas_dc", "pallas_dc_v2"])
+def test_offline_paf_matches_golden(tmp_path, backend):
+    assert _run_paf(tmp_path, backend) == GOLDEN.read_bytes(), \
+        f"offline PAF for backend {backend} diverged from the snapshot"
+
+
+@pytest.mark.parametrize("backend", ["lax", "pallas_dc"])
+def test_online_paf_matches_golden(tmp_path, backend):
+    """The online Poisson path must emit the same PAF as the offline
+    drain (same engine underneath) regardless of arrival timing."""
+    assert _run_paf(tmp_path, backend, online=True) == GOLDEN.read_bytes(), \
+        f"online PAF for backend {backend} diverged from the snapshot"

@@ -33,7 +33,7 @@ def reads(ref):
 @pytest.fixture(scope="module")
 def engine(epi):
     cfg = EngineConfig(buckets=(96, 192), max_batch=4, max_delay_s=0.02,
-                       filter_k=10)
+                       filter_k=10, minimizer_w=8, minimizer_k=12)
     eng = ServeEngine(epi, cfg)
     yield eng
     eng.close()
@@ -80,7 +80,7 @@ def test_executor_cache_one_trace_per_bucket(engine, reads):
 def test_deadline_triggered_flush(epi, reads):
     short, _ = reads
     cfg = EngineConfig(buckets=(96,), max_batch=8, max_delay_s=0.03,
-                       filter_k=10)
+                       filter_k=10, minimizer_w=8, minimizer_k=12)
     with ServeEngine(epi, cfg) as eng:
         futs = [eng.submit(r) for r in short.reads[:3]]
         res = [f.result(timeout=30) for f in futs]  # flushes despite 3 < 8
@@ -94,7 +94,7 @@ def test_result_cache_hit_and_epoch_invalidation(ref, reads):
     short, _ = reads
     epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
     cfg = EngineConfig(buckets=(96,), max_batch=4, max_delay_s=0.005,
-                       filter_k=10)
+                       filter_k=10, minimizer_w=8, minimizer_k=12)
     with ServeEngine(epi, cfg) as eng:
         r0 = eng.map_all([short.reads[0]])[0]
         assert not r0.cached
@@ -112,7 +112,7 @@ def test_result_cache_hit_and_epoch_invalidation(ref, reads):
 def test_worker_exception_fails_futures_not_hangs(epi, reads):
     short, _ = reads
     cfg = EngineConfig(buckets=(96,), max_batch=4, max_delay_s=0.005,
-                       filter_k=10)
+                       filter_k=10, minimizer_w=8, minimizer_k=12)
     eng = ServeEngine(epi, cfg)
 
     def boom(cap):
@@ -129,9 +129,10 @@ def test_worker_exception_fails_futures_not_hangs(epi, reads):
 
 
 def test_engine_rejects_mismatched_minimizer_params(ref):
-    epi = minimizer_index.build_epoched_index(ref, w=10, k=15)
+    epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
     with pytest.raises(ValueError, match="minimizer"):
-        ServeEngine(epi, EngineConfig(buckets=(96,)))  # engine seeds w=8/k=12
+        # engine seeds with the 10/15 defaults; index was built 8/12
+        ServeEngine(epi, EngineConfig(buckets=(96,)))
 
 
 def test_result_cache_unit():
@@ -209,3 +210,41 @@ def test_offline_online_identical_paf(tmp_path):
     assert off == on
     assert off.count("\n") >= 8  # most of the 10 reads mapped
     assert "gid" not in off  # stripped before write_paf
+
+
+def test_executor_cache_keyed_on_align_backend(epi, reads):
+    """Switching align backends must never reuse a stale compiled
+    executor: the cache key carries the resolved backend name."""
+    short, _ = reads
+    cfg = EngineConfig(buckets=(96,), max_batch=4, align_backend="lax",
+                       filter_k=10, minimizer_w=8, minimizer_k=12)
+    with ServeEngine(epi, cfg) as eng:
+        assert eng.align_backend == "lax"
+        r_lax = eng.map_all(list(short.reads[:4]))
+        keys_lax = set(eng._executors)
+    cfg2 = EngineConfig(buckets=(96,), max_batch=4,
+                        align_backend="pallas_dc_v2", filter_k=10,
+                        minimizer_w=8, minimizer_k=12)
+    with ServeEngine(epi, cfg2) as eng2:
+        assert eng2.align_backend == "pallas_dc_v2"
+        r_pal = eng2.map_all(list(short.reads[:4]))
+        assert set(eng2._executors) != keys_lax
+    # same reads, same results, different backend underneath
+    assert [(r.position, r.distance) for r in r_lax] == \
+        [(r.position, r.distance) for r in r_pal]
+
+
+def test_map_stream_over_prefetcher(epi, reads):
+    """genomics.pipeline.map_stream: batches → MapResults via dispatch."""
+    short, _ = reads
+    idx = epi.index
+    batches = pipeline.ReadBatches(list(short.reads), batch=4, cap=96)
+    got = {}
+    with pipeline.Prefetcher(iter(batches)) as pf:
+        for b, res in pipeline.map_stream(idx, pf, backend="lax", p_cap=128,
+                                          filter_bits=96, filter_k=12,
+                                          minimizer_w=8, minimizer_k=12):
+            got[b] = np.asarray(res.position)
+    assert sorted(got) == [0, 1, 2]
+    pos = np.concatenate([got[b] for b in sorted(got)])[:len(short.true_pos)]
+    assert (np.abs(pos - short.true_pos) <= 16).mean() >= 0.7

@@ -1,0 +1,111 @@
+"""Graph-vs-linear serving throughput under open-loop Poisson arrivals.
+
+The same read set replayed through the `repro.serve` micro-batching
+engine twice — once against the linear reference index (PAF workload)
+and once against the variation-graph index (``workload="graph"``, GAF
+workload) — reporting reads/s, tail latency and the graph/linear
+throughput ratio (the EXPERIMENTS.md §Perf graph row).  Poisson arrivals
+because that is the regime where the workload axis matters: both
+workloads share the engine's admission queue, bucket ladder and executor
+cache, so the delta isolates the mapper itself.
+
+    PYTHONPATH=src python benchmarks/graph_serve.py           # full
+    PYTHONPATH=src python benchmarks/graph_serve.py --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import minimizer_index
+from repro.genomics import simulate
+from repro.graph import index as graph_index
+from repro.serve import EngineConfig, Metrics, ResultCache, ServeEngine, \
+    poisson_load
+
+try:
+    from .common import row
+except ImportError:  # script-style: python benchmarks/graph_serve.py
+    from common import row
+
+
+def run_workload(workload, index, reads, *, buckets, max_batch, rate_rps,
+                 filter_k, warmup_reads, seed):
+    cfg = EngineConfig(buckets=buckets, max_batch=max_batch,
+                       max_delay_s=0.005, workload=workload,
+                       filter_k=filter_k, minimizer_w=8, minimizer_k=12)
+    engine = ServeEngine(index, cfg)
+    engine.map_all(warmup_reads)  # compile every bucket executor off-clock
+    engine.metrics = Metrics()  # measured run starts from clean instruments
+    engine.cache = ResultCache(cfg.cache_capacity)
+    rep = poisson_load(engine, reads, rate_rps=rate_rps, seed=seed)
+    mapped = sum(1 for _, r in rep.results if r.position >= 0)
+    summary = {
+        "workload": workload,
+        "backend": engine.align_backend,
+        "n_reads": len(reads),
+        "mapped": mapped,
+        "reads_per_s": round(rep.reads_per_s, 2),
+        "p50_ms": round(rep.p50_ms, 3),
+        "p99_ms": round(rep.p99_ms, 3),
+        "executors": engine.n_executors,
+    }
+    engine.close()
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small ref, low rate)")
+    ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (reads/s)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        ref_len, n_reads, read_len = 4_000, 32, 100
+        buckets, max_batch, rate = (128,), 8, args.rate or 400.0
+    else:
+        ref_len, n_reads, read_len = 20_000, 96, 150
+        buckets, max_batch, rate = (160, 320), 16, args.rate or 100.0
+
+    ref = simulate.random_reference(ref_len, seed=1)
+    variants = simulate.simulate_variants(
+        ref, n_snp=ref_len // 400, n_ins=ref_len // 800,
+        n_del=ref_len // 800, seed=3)
+    lin_idx = minimizer_index.build_epoched_index(ref, w=8, k=12)
+    g_idx = graph_index.build_epoched_graph_index(
+        ref, variants, w=8, k=12, window=max(buckets) + 128)
+    rs = simulate.simulate_reads(ref, n_reads=n_reads, read_len=read_len,
+                                 profile=simulate.ILLUMINA, seed=2)
+    warmup = simulate.simulate_reads(ref, n_reads=4, read_len=read_len,
+                                     profile=simulate.ILLUMINA, seed=99)
+    common = dict(buckets=buckets, max_batch=max_batch, rate_rps=rate,
+                  filter_k=max(8, int(read_len * 0.05 * 1.5) + 4),
+                  warmup_reads=list(warmup.reads), seed=args.seed)
+
+    out = {"ref_len": ref_len, "n_variants": len(variants), "rate_rps": rate}
+    for workload, index in (("linear", lin_idx), ("graph", g_idx)):
+        s = run_workload(workload, index, list(rs.reads), **common)
+        out[workload] = s
+        row(f"graph_serve_{workload}", 1e6 / max(s["reads_per_s"], 1e-9),
+            f"reads_per_s={s['reads_per_s']};p50_ms={s['p50_ms']};"
+            f"p99_ms={s['p99_ms']};mapped={s['mapped']}/{s['n_reads']};"
+            f"backend={s['backend']}")
+    out["graph_vs_linear_throughput"] = round(
+        out["graph"]["reads_per_s"] / max(out["linear"]["reads_per_s"], 1e-9),
+        3)
+    row("graph_serve_ratio", 0.0,
+        f"graph_vs_linear_throughput={out['graph_vs_linear_throughput']}x")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

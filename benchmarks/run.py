@@ -6,14 +6,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
   prealign_filter  — §4.10.3 (GenASM-DC filter vs q-gram approx, accuracy)
   edit_distance    — Fig 4-13 (GenASM vs Myers/Edlib)
   bitalign         — Fig 6-15 (BitAlign vs graph-DP / PaSGAL stand-in)
-  segram_e2e       — Figs 6-11..6-14 (SeGraM end-to-end mapping)
+  segram_e2e       — Figs 6-11..6-14 (SeGraM mapping on repro.graph)
+  graph_serve      — graph vs linear serving throughput (Poisson)
   kernel_dc        — Ch. 5 BitMAc kernel analysis
   align_dispatch   — repro.align backend dispatch (lax vs pallas_dc*)
   serve_engine     — micro-batching engine under Poisson arrivals
   roofline         — §Roofline table from the multi-pod dry-run
 
-``--smoke`` runs the CI-sized subset (align_dispatch + serve_engine) and
-``--json PATH`` writes their summaries into one artifact:
+``--smoke`` runs the CI-sized subset (align_dispatch + serve_engine +
+segram_e2e + graph_serve) and ``--json PATH`` writes their summaries
+into one artifact:
 
     PYTHONPATH=src python benchmarks/run.py --smoke --json bench_summary.json
 """
@@ -31,7 +33,7 @@ if __package__ in (None, ""):  # script-style: python benchmarks/run.py
     __package__ = "benchmarks"
 
 # modules with a --smoke flag and a summary-dict return (the CI subset)
-SMOKE_MODS = ("align_dispatch", "serve_engine")
+SMOKE_MODS = ("align_dispatch", "serve_engine", "segram_e2e", "graph_serve")
 
 
 def main(argv=None) -> None:
@@ -44,9 +46,9 @@ def main(argv=None) -> None:
                     help="write collected module summaries here")
     args = ap.parse_args(argv)
 
-    from . import (align_dispatch, bitalign, edit_distance, kernel_dc,
-                   prealign_filter, read_alignment, roofline, segram_e2e,
-                   serve_engine)
+    from . import (align_dispatch, bitalign, edit_distance, graph_serve,
+                   kernel_dc, prealign_filter, read_alignment, roofline,
+                   segram_e2e, serve_engine)
 
     mods = {
         "read_alignment": read_alignment,
@@ -54,6 +56,7 @@ def main(argv=None) -> None:
         "edit_distance": edit_distance,
         "bitalign": bitalign,
         "segram_e2e": segram_e2e,
+        "graph_serve": graph_serve,
         "kernel_dc": kernel_dc,
         "align_dispatch": align_dispatch,
         "serve_engine": serve_engine,

@@ -1,29 +1,33 @@
-"""SeGraM example: build a variation graph, map reads to it (seed + BitAlign).
+"""Sequence-to-graph mapping example: build a variation graph, map reads
+through the tiled `repro.graph` index and the `repro.align` dispatch
+(the serve engine compiles exactly this path for ``workload="graph"``).
 
     PYTHONPATH=src python examples/graph_alignment.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.segram import graph, segram
+from repro.graph import index as graph_index
+from repro.graph import mapper as graph_mapper
 from repro.genomics import encode, simulate
-from repro.genomics.io import cigar_string
+from repro.genomics.io import cigar_string, gaf_path
 
 ref = simulate.random_reference(5000, seed=3)
 variants = simulate.simulate_variants(ref, n_snp=16, n_ins=6, n_del=6, seed=4)
-g = graph.build_graph(ref, variants)
-print(f"graph: {g.n_nodes} nodes ({g.n_nodes - len(ref)} variant nodes)")
+idx = graph_index.build_graph_index(ref, variants, w=8, k=12, window=256)
+print(f"graph: {idx.n_nodes} nodes ({idx.n_nodes - len(ref)} variant nodes), "
+      f"{idx.n_tiles} tiles of {idx.tile_len} @ stride {idx.tile_stride}")
 
-index = segram.preprocess(ref, g, w=8, k=12)
 rs = simulate.simulate_reads(ref, n_reads=8, read_len=100,
                              profile=simulate.ILLUMINA, seed=5)
 reads, lens = encode.batch_reads(rs.reads, 128)
-out = segram.map_batch(index, jnp.asarray(reads), jnp.asarray(lens),
-                       m_bits=128, k=16, win_len=192,
-                       minimizer_w=8, minimizer_k=12)
+out = graph_mapper.map_batch_index(
+    idx, jnp.asarray(reads), jnp.asarray(lens), p_cap=128, filter_bits=96,
+    filter_k=12, backend="graph_lax")
 for i in range(8):
-    d = int(out["distance"][i])
-    node = int(out["node"][i])
-    cig = cigar_string(np.asarray(out["ops"][i]), int(out["n_ops"][i]))
-    print(f"read{i}: node={node} dist={d} cigar={cig[:48]}")
-assert int(np.sum(~np.asarray(out["failed"]))) >= 6
+    d = int(out.distance[i])
+    pos = int(out.position[i])
+    path, plen = gaf_path(np.asarray(out.path[i]))
+    cig = cigar_string(np.asarray(out.ops[i]), int(out.n_ops[i]))
+    print(f"read{i}: pos={pos} dist={d} path={path[:40]} cigar={cig[:40]}")
+assert int(np.sum(~np.asarray(out.failed))) >= 6

@@ -76,3 +76,7 @@ register_backend(
     "pallas_dc_v2", partial(_pallas_fn, store_r=True), uses_pallas=True,
     description="Pallas GenASM-DC v2 kernel, R-only TB store (3x less TB "
                 "traffic)")
+
+# the sequence-to-graph backends (graph_lax / graph_pallas) live with the
+# graph subsystem; importing them registers them alongside the linear four
+from repro.graph import backends as _graph_backends  # noqa: E402,F401

@@ -50,6 +50,9 @@ class AlignResult(NamedTuple):
     n_ops: jnp.ndarray  # int32
     text_consumed: jnp.ndarray  # int32
     failed: jnp.ndarray  # bool — a window had no alignment within k
+    # graph backends only: [cap] int32 window-relative node offset consumed
+    # by each op (-1 for I/padding); None for the linear backends
+    nodes: jnp.ndarray | None = None
 
 
 def pad_pattern(pattern: jnp.ndarray, p_len, cap: int, cfg: GenASMConfig):

@@ -89,6 +89,41 @@ def check_cigar(ops: np.ndarray, n_ops: int, pattern: np.ndarray, text: np.ndarr
     return None
 
 
+def graph_edit_distance_anchored(pattern: np.ndarray, nodes: np.ndarray,
+                                 preds: list[list[int]],
+                                 start: int = 0) -> int:
+    """Anchored semi-global sequence-to-graph distance oracle.
+
+    The first consumed node must be ``start`` (leading skipped graph
+    would cost deletions, exactly the linear ``levenshtein_prefix``
+    anchor), the pattern is fully consumed, trailing graph is free.
+    Ground truth for the windowed graph backends' anchored semantics.
+    """
+    m = len(pattern)
+    n = len(nodes)
+    INF = 10 ** 9
+    # A[j][i] = min edits: pattern[:j] consumed, node i consumed last,
+    # node-consuming ops walking a path that began at `start`
+    A = np.full((m + 1, n), INF, np.int64)
+    for j in range(m + 1):
+        for i in range(n):
+            best = INF
+            cost = 0 if j > 0 and pattern[j - 1] == nodes[i] else 1
+            if i == start:
+                best = j + 1  # j leading insertions, then delete `start`
+                if j > 0:
+                    best = min(best, (j - 1) + cost)  # … then match/subst
+            if j > 0 and A[j - 1][i] < INF:
+                best = min(best, A[j - 1][i] + 1)  # insertion at i
+            for p in preds[i]:
+                if j > 0 and A[j - 1][p] < INF:
+                    best = min(best, A[j - 1][p] + cost)  # match/subst edge
+                if A[j][p] < INF:
+                    best = min(best, A[j][p] + 1)  # deletion of node i
+            A[j][i] = best
+    return int(min(A[m].min(), m))  # all-insertions consumes no node
+
+
 def graph_edit_distance(pattern: np.ndarray, nodes: np.ndarray,
                         preds: list[list[int]]) -> int:
     """Sequence-to-graph semi-global distance oracle (PaSGAL semantics).

@@ -8,13 +8,20 @@ hop window are encoded as per-node **hopBits** (paper Figure 6-9): bit
 The linearization keeps variant branches adjacent to their backbone
 position so real variation graphs have small hop distances; edges beyond
 ``HOP_LIMIT`` would need graph re-chunking (the paper picks the hop limit
-so this does not occur; construction asserts it).
+so this does not occur; construction raises so the caller can re-chunk —
+`repro.graph.index` does exactly that for its tiled index).
+
+Construction is linear in nodes + edges: predecessor lists are tracked
+while the linearization is emitted (a SNP branch copies the predecessor
+list its backbone twin was just given), and hopBits are accumulated with
+one vectorized scatter at the end.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import NamedTuple
 
+import jax.numpy as jnp
 import numpy as np
 
 HOP_LIMIT = 16
@@ -23,7 +30,8 @@ HOP_LIMIT = 16
 class Variant(NamedTuple):
     """pos: 0-based backbone position; kind: 'snp' | 'ins' | 'del'.
 
-    snp: ``alt`` (len ≥ 1) replaces ref base(s) at pos.
+    snp: ``alt`` (len ≥ 1) replaces the ref base at pos (len > 1 spells a
+    branch of chained nodes, e.g. an MNP allele).
     ins: ``alt`` inserted *after* backbone position pos.
     del: ``span`` backbone bases deleted starting at pos.
     """
@@ -47,12 +55,19 @@ class GenomeGraph:
 
 
 def build_graph(ref: np.ndarray, variants: list[Variant] = ()) -> GenomeGraph:
-    """Build a variation graph from a linear reference + variant list."""
+    """Build a variation graph from a linear reference + variant list.
+
+    Raises ``ValueError`` for malformed variants: an empty ``snp`` alt, a
+    deletion whose landing position ``pos + span + 1`` falls past the
+    reference end (it would silently vanish otherwise), or any edge whose
+    hop distance exceeds ``HOP_LIMIT``.
+    """
     L = len(ref)
     # nodes assembled in backbone order; alt nodes inserted adjacent
     bases: list[int] = []
     backbone: list[int] = []
-    edges: list[tuple[int, int]] = []
+    src: list[int] = []  # edge sources
+    dst: list[int] = []  # edge targets
     node_of_backbone = np.full(L, -1, np.int64)
 
     by_pos: dict[int, list[Variant]] = {}
@@ -66,47 +81,63 @@ def build_graph(ref: np.ndarray, variants: list[Variant] = ()) -> GenomeGraph:
         bases.append(int(ref[p]))
         backbone.append(p)
         node_of_backbone[p] = nid
-        for t in prev_tails:
-            edges.append((t, nid))
-        for t in pending_del.pop(p, []):
-            edges.append((t, nid))
+        preds = prev_tails + pending_del.pop(p, [])
+        for t in preds:
+            src.append(t)
+            dst.append(nid)
         prev_tails = [nid]
         for v in by_pos.get(p, []):
             if v.kind == "snp":
-                alt_id = len(bases)
-                bases.append(int(v.alt[0]))
-                backbone.append(-1)
-                # same predecessors as nid
-                for (a, b) in [e for e in edges if e[1] == nid]:
-                    edges.append((a, alt_id))
-                prev_tails.append(alt_id)
+                if not v.alt:
+                    raise ValueError(f"snp at {p} needs a non-empty alt")
+                # branch carrying the alt allele: the first alt node shares
+                # nid's predecessor list (tracked above — no edge rescans),
+                # further alt bases chain behind it
+                prev = -1
+                for j, ab in enumerate(v.alt):
+                    alt_id = len(bases)
+                    bases.append(int(ab))
+                    backbone.append(-1)
+                    for a in (preds if j == 0 else [prev]):
+                        src.append(a)
+                        dst.append(alt_id)
+                    prev = alt_id
+                prev_tails.append(prev)
             elif v.kind == "ins":
                 prev = nid
                 for ab in v.alt:
                     alt_id = len(bases)
                     bases.append(int(ab))
                     backbone.append(-1)
-                    edges.append((prev, alt_id))
+                    src.append(prev)
+                    dst.append(alt_id)
                     prev = alt_id
                 prev_tails.append(prev)
             elif v.kind == "del":
                 tgt = p + v.span + 1
-                if tgt < L:
-                    pending_del.setdefault(tgt, []).append(nid)
+                if tgt >= L:
+                    raise ValueError(
+                        f"del at {p} (span {v.span}) lands at backbone "
+                        f"{tgt}, past the reference end {L}; trim the "
+                        f"variant or extend the reference")
+                pending_del.setdefault(tgt, []).append(nid)
             else:
                 raise ValueError(v.kind)
 
     n = len(bases)
     succ = np.zeros(n, np.uint32)
-    for a, b in edges:
+    if src:
+        a = np.asarray(src, np.int64)
+        b = np.asarray(dst, np.int64)
         hop = b - a - 1
-        if hop < 0:
+        if hop.min() < 0:
             raise ValueError("graph not topologically ordered")
-        if hop >= HOP_LIMIT:
+        if hop.max() >= HOP_LIMIT:
+            w = int(hop.argmax())
             raise ValueError(
-                f"edge hop {hop + 1} exceeds HOP_LIMIT={HOP_LIMIT}; re-chunk the graph"
-            )
-        succ[a] |= np.uint32(1) << np.uint32(hop)
+                f"edge {int(a[w])}->{int(b[w])} hop {int(hop[w]) + 1} "
+                f"exceeds HOP_LIMIT={HOP_LIMIT}; re-chunk the graph")
+        np.bitwise_or.at(succ, a, np.uint32(1) << hop.astype(np.uint32))
     return GenomeGraph(
         bases=np.array(bases, np.int8),
         succ_bits=succ,
@@ -118,6 +149,23 @@ def build_graph(ref: np.ndarray, variants: list[Variant] = ()) -> GenomeGraph:
 def linear_graph(ref: np.ndarray) -> GenomeGraph:
     """Degenerate graph (pure backbone) — BitAlign on it must equal linear Bitap."""
     return build_graph(ref, [])
+
+
+def hop_boundary_mask(length: int, valid_len) -> jnp.ndarray:
+    """The one boundary-masking rule for subgraph windows.
+
+    Returns ``[length] uint32``: entry ``i`` keeps hop bit ``h`` iff the
+    target node ``i + h + 1`` stays below ``valid_len`` (the window/graph
+    end).  ``valid_len`` may be a traced scalar; every window extractor —
+    host-side :func:`extract_subgraph`, device-side ``segram._window``,
+    and the tile builder in `repro.graph.index` — applies this mask so
+    out-of-window hops cannot disagree between paths.
+    """
+    room = jnp.clip(
+        jnp.asarray(valid_len, jnp.int32) - 1 - jnp.arange(length), 0, 32)
+    return jnp.where(
+        room >= 32, jnp.uint32(0xFFFFFFFF),
+        (jnp.uint32(1) << room.astype(jnp.uint32)) - 1)
 
 
 def extract_subgraph(g: GenomeGraph, start_node: int, length: int):
@@ -133,10 +181,7 @@ def extract_subgraph(g: GenomeGraph, start_node: int, length: int):
     succ = np.zeros(length, np.uint32)
     bases[: e - s] = g.bases[s:e]
     succ[: e - s] = g.succ_bits[s:e]
-    # mask successor bits that point past the window end
-    for i in range(max(0, e - s - HOP_LIMIT), e - s):
-        room = e - s - i - 1
-        succ[i] &= np.uint32((1 << max(room, 0)) - 1)
+    succ &= np.asarray(hop_boundary_mask(length, e - s))
     return bases, succ
 
 

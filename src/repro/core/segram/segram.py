@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bitalign import bitalign_dc, bitalign_tb
-from .graph import HOP_LIMIT, GenomeGraph
+from .graph import HOP_LIMIT, GenomeGraph, hop_boundary_mask
 from .minimizer import MinimizerIndex, build_index, seed_candidates
 
 
@@ -46,12 +46,7 @@ def _window(index: SeGraMIndex, start_node, length: int):
     s = jnp.clip(start_node, 0, jnp.maximum(n - length, 0))
     bases = jax.lax.dynamic_slice(index.bases, (s,), (length,))
     succ = jax.lax.dynamic_slice(index.succ_bits, (s,), (length,))
-    room = jnp.clip(length - 1 - jnp.arange(length), 0, 32)
-    mask = jnp.where(
-        room >= 32, jnp.uint32(0xFFFFFFFF),
-        (jnp.uint32(1) << room.astype(jnp.uint32)) - 1,
-    )
-    return bases, succ & mask, s
+    return bases, succ & hop_boundary_mask(length, length), s
 
 
 @partial(jax.jit, static_argnames=("m_bits", "k", "win_len", "max_candidates",

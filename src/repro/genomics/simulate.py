@@ -66,6 +66,22 @@ def simulate_reads(ref: np.ndarray, *, n_reads: int, read_len: int,
     return ReadSet(reads=reads, true_pos=pos)
 
 
+def spell_graph_path(graph, start: int, length: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Spell a read along a random successor walk of ``graph`` from
+    ``start`` (ground-truth reads for sequence-to-graph tests)."""
+    seq: list[int] = []
+    cur = int(start)
+    while len(seq) < length and cur < graph.n_nodes:
+        seq.append(int(graph.bases[cur]))
+        bits = int(graph.succ_bits[cur])
+        if not bits:
+            break
+        hops = [h for h in range(32) if (bits >> h) & 1]
+        cur = cur + 1 + int(rng.choice(hops))
+    return np.array(seq, np.int8)
+
+
 def simulate_variants(ref: np.ndarray, *, n_snp=10, n_ins=4, n_del=4, seed=0):
     """Variant list for genome-graph construction (spread, non-overlapping)."""
     from repro.core.segram.graph import Variant

@@ -1,0 +1,15 @@
+"""repro.graph — sequence-to-graph mapping as a first-class workload.
+
+DESIGN.md §10: windowed BitAlign sharing the linear aligner's window
+loop (`windowed`), the ``graph_lax``/``graph_pallas`` entries in the
+`repro.align` registry (`backends`), the tiled graph-reference index
+with epoch hooks (`index`), and the batched graph mapper (`mapper`).
+"""
+from .backends import as_graph_text, batched_graph_align  # noqa: F401
+from .index import (EpochedGraphIndex, GraphArrays, GraphIndex,  # noqa: F401
+                    build_epoched_graph_index, build_graph_index,
+                    load_graph_index, save_graph_index)
+from .mapper import (GraphMapResult, graph_backend_name,  # noqa: F401
+                     map_batch, map_batch_index)
+from .windowed import (bitalign_search, graph_align,  # noqa: F401
+                       pack_graph_text, pack_linear_text, unpack_graph_text)

@@ -1,0 +1,193 @@
+"""End-to-end sequence-to-graph read mapper (paper Figure 6-1, batched).
+
+Seed-and-extend over a tiled graph index: MinSeed minimizer seeding on
+the backbone → **one** batched candidate-window gather
+(``tile_gtext[tile_ids]``) → **one** ``[B · max_candidates]`` BitAlign-DC
+filter launch that scores *and* anchor-refines every candidate window
+(per-node distances, argmin = refined start node) → windowed graph
+alignment of each read's best window through `repro.align.align_batch`
+(``graph_lax`` / ``graph_pallas``).  Contrast `core/segram/segram.py`'s
+offline toy, which vmaps a per-candidate whole-window scan inside every
+read — here the candidate axis is folded into the batch, so the kernel
+sees one launch per stage instead of ``B × max_candidates`` traces.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitvector import WILDCARD
+from repro.core.genasm import GenASMConfig
+from repro.core.segram.graph import HOP_LIMIT
+from repro.core.segram.minimizer import seed_candidates
+
+from .index import GraphArrays, GraphIndex
+from .windowed import bitalign_search, unpack_graph_text
+
+# linear backend names map to their graph twins so ``backend="auto"`` (or
+# an engine configured with a linear name) serves the graph workload on
+# the matching implementation tier
+_GRAPH_TWIN = {"lax": "graph_lax", "ref": "graph_lax",
+               "pallas_dc": "graph_pallas", "pallas_dc_v2": "graph_pallas"}
+
+
+def graph_backend_name(backend: str | None = None) -> str:
+    """Resolve a backend name (or None/"auto") to a graph backend."""
+    from repro import align as align_dispatch
+
+    name = align_dispatch.resolve_backend(backend).name
+    return _GRAPH_TWIN.get(name, name)
+
+
+class GraphMapResult(NamedTuple):
+    position: jnp.ndarray  # int32 backbone coord of first aligned node (-1)
+    distance: jnp.ndarray  # int32 edit distance (-1 if unmapped)
+    ops: jnp.ndarray  # packed CIGAR
+    n_ops: jnp.ndarray
+    path: jnp.ndarray  # [B, cap] int32 global node ids per op (-1 for I/pad)
+    failed: jnp.ndarray
+
+
+def _filter_dists(wins_flat, fpat_flat, flens_flat, *, m_bits: int, k: int,
+                  use_kernel: bool, block_bt: int | None, interpret: bool):
+    """[BC, tile_len] per-node distances, kernel or pure-lax path."""
+    bases, succ = unpack_graph_text(wins_flat)
+    if use_kernel:
+        from repro.align.batched import _pad_to_block
+        from repro.kernels.bitalign import bitalign_dc_batch
+
+        bc = wins_flat.shape[0]
+        bt = min(block_bt or 128, max(8, bc))
+        dists, _ = bitalign_dc_batch(
+            _pad_to_block(bases, bt, 4), _pad_to_block(succ, bt, 0),
+            _pad_to_block(fpat_flat, bt, WILDCARD),
+            _pad_to_block(flens_flat, bt, m_bits),
+            m_bits=m_bits, k=k, block_bt=bt, interpret=interpret)
+        return dists[:bc]
+    f = partial(bitalign_search, m_bits=m_bits, k=k)
+    return jax.vmap(f)(bases, succ, fpat_flat, flens_flat)
+
+
+def map_batch(
+    garr: GraphArrays,
+    reads: jnp.ndarray,
+    read_lens: jnp.ndarray,
+    *,
+    tile_stride: int,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    max_candidates: int = 4,
+    minimizer_w: int = 10,
+    minimizer_k: int = 15,
+    backend: str | None = None,
+    block_bt: int | None = None,
+) -> GraphMapResult:
+    """Map a read batch against the tiled graph index.
+
+    ``garr`` is the device half of a `GraphIndex` whose ``tile_stride``
+    the caller passes statically (it shapes the tile→node arithmetic).
+    ``backend`` resolves through `repro.align` with linear names mapped
+    to their graph twins.
+    """
+    from repro import align as align_dispatch
+
+    be_name = graph_backend_name(backend)
+    use_kernel = align_dispatch.get_backend(be_name).uses_pallas
+    interpret = align_dispatch.needs_interpret()
+
+    b = reads.shape[0]
+    c = max_candidates
+    n = garr.bases.shape[0]
+    big_l = garr.node_of_backbone.shape[0]
+    n_tiles, tile_len = garr.tile_gtext.shape
+    t_cap = p_cap + 2 * cfg.w
+    search_span = tile_len - t_cap
+    if search_span < tile_stride:
+        raise ValueError(
+            f"tile_len {tile_len} leaves a {search_span}-node anchor search "
+            f"span < tile_stride {tile_stride} at p_cap {p_cap}; rebuild the "
+            f"index with window >= {t_cap}")
+    if filter_bits % 32:
+        raise ValueError(f"filter_bits must be a multiple of 32, got "
+                         f"{filter_bits}")
+    read_lens = read_lens.astype(jnp.int32)
+
+    # --- seed on the backbone minimizer table
+    seed_fn = partial(seed_candidates, w=minimizer_w, k=minimizer_k,
+                      max_candidates=c)
+    starts, votes = jax.vmap(
+        lambda r: seed_fn(r, garr.idx_hashes, garr.idx_positions))(reads)
+
+    # backbone coordinate -> node id, with margin for leading variation
+    sb = jnp.clip(starts - HOP_LIMIT, 0, big_l - 1)
+    node = garr.node_of_backbone[sb]  # [B, C]
+    tile = jnp.clip(node // tile_stride, 0, n_tiles - 1)
+
+    # --- one gather: every candidate window for the whole batch
+    wins = garr.tile_gtext[tile]  # [B, C, tile_len]
+
+    # --- one filter launch over the flattened candidate axis
+    fb = min(filter_bits, p_cap)
+    fpat = jnp.where(
+        jnp.arange(fb)[None, :] < jnp.minimum(read_lens, fb)[:, None],
+        reads[:, :fb], WILDCARD).astype(jnp.int8)
+    flens = jnp.minimum(read_lens, fb)
+    dists = _filter_dists(
+        wins.reshape(b * c, tile_len),
+        jnp.repeat(fpat, c, axis=0), jnp.repeat(flens, c),
+        m_bits=fb, k=filter_k, use_kernel=use_kernel, block_bt=block_bt,
+        interpret=interpret).reshape(b, c, tile_len)
+    # anchors past the search span could not fit a full alignment window
+    dists = jnp.where(jnp.arange(tile_len)[None, None, :] < search_span,
+                      dists, filter_k + 1)
+    d_c = jnp.min(dists, axis=-1)  # [B, C]
+    off_c = jnp.argmin(dists, axis=-1).astype(jnp.int32)
+    d_c = jnp.where(votes > 0, d_c, filter_k + 1)
+
+    rows = jnp.arange(b)
+    ci = jnp.argmin(d_c, axis=-1)  # best candidate per read
+    prefilter_ok = d_c[rows, ci] <= filter_k
+    off = off_c[rows, ci]  # refined anchor offset inside the tile
+    tile_b = tile[rows, ci]
+
+    # --- slice the anchored alignment window out of the winning tile
+    gwin = jax.vmap(
+        lambda wbuf, o: jax.lax.dynamic_slice(wbuf, (o,), (t_cap,)))(
+        wins[rows, ci], off)
+    t_len = jnp.clip(garr.tile_valid[tile_b] - off, 0, t_cap)
+
+    pat = jnp.where(jnp.arange(p_cap)[None, :] < read_lens[:, None],
+                    reads[:, :p_cap], WILDCARD).astype(jnp.int8)
+    res = align_dispatch.align_batch(
+        gwin, pat, read_lens, t_len, cfg=cfg, backend=be_name, p_cap=p_cap,
+        block_bt=block_bt)
+
+    # --- window-relative node offsets -> global path -> backbone position
+    origin = tile_b * tile_stride + off  # global node id of window node 0
+    path = jnp.where(res.nodes >= 0, res.nodes + origin[:, None], -1)
+    bpath = jnp.where(path >= 0, garr.backbone[jnp.clip(path, 0, n - 1)], -1)
+    first = jnp.argmax(bpath >= 0, axis=-1)  # first backbone node on the path
+    pos = bpath[rows, first]
+    failed = res.failed | (~prefilter_ok)
+    return GraphMapResult(
+        position=jnp.where(failed, -1, pos).astype(jnp.int32),
+        distance=jnp.where(failed, -1, res.distance),
+        ops=res.ops,
+        n_ops=res.n_ops,
+        path=jnp.where(failed[:, None], -1, path),
+        failed=failed,
+    )
+
+
+def map_batch_index(gidx: GraphIndex, reads, read_lens, **kw
+                    ) -> GraphMapResult:
+    """`map_batch` with the geometry pulled off a host `GraphIndex`."""
+    kw.setdefault("minimizer_w", gidx.minimizer_w)
+    kw.setdefault("minimizer_k", gidx.minimizer_k)
+    return map_batch(gidx.arrays, reads, read_lens,
+                     tile_stride=gidx.tile_stride, **kw)

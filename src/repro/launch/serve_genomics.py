@@ -2,7 +2,7 @@
 
 Both serving modes sit on the same ``repro.serve`` micro-batching engine
 (length-bucketed padding, per-bucket compiled executors, result cache —
-DESIGN.md §8), so they produce identical PAF for the same read set:
+DESIGN.md §8), so they produce identical output for the same read set:
 
 * **offline** (default) — drain a fixed read set through the lease-based
   work queue (straggler/failure reassignment, DESIGN.md §6); each claimed
@@ -10,6 +10,11 @@ DESIGN.md §8), so they produce identical PAF for the same read set:
 * **``--online``** — synthetic open-loop Poisson arrivals through the
   engine's admission queue (`serve/session.py`), reporting reads/s and
   tail latency.
+
+Both compose with the workload axis (DESIGN.md §10): ``--mode linear``
+emits PAF against a linear reference, ``--mode graph`` builds a
+variation-graph index and emits GAF (node path + CIGAR) through the
+``graph_lax``/``graph_pallas`` backends.
 
 On a pod this runs one process per host with reads sharded by
 process_index.
@@ -48,12 +53,31 @@ def paf_row(gid: int, res, ref_len: int) -> dict:
     }
 
 
+def gaf_row(gid: int, res) -> dict:
+    """GAF row dict for one graph-mapped read (node path + CIGAR).
+
+    ``"tstart"`` (backbone coordinate of the first aligned node) rides
+    along for position accounting — neither writer emits it.
+    """
+    L = res.read_len
+    pstr, plen = io.gaf_path(res.path if res.path is not None else ())
+    return {
+        "gid": gid,
+        "qname": f"read{gid}", "qlen": L, "qstart": 0,
+        "qend": L, "strand": "+", "path": pstr,
+        "plen": plen, "pstart": 0, "pend": plen,
+        "nmatch": L - res.distance, "alnlen": int(res.n_ops), "mapq": 60,
+        "tstart": res.position,
+        "cigar": io.cigar_string(res.ops, res.n_ops),
+    }
+
+
 def strip_gids(rows: list[dict]) -> list[dict]:
     return [{k: v for k, v in r.items() if k != "gid"} for r in rows]
 
 
 def _run_offline(engine: ServeEngine, reads, shard_ids, *, batch: int,
-                 lease_s: float) -> list[dict]:
+                 lease_s: float, row_fn) -> list[dict]:
     """Work-queue path: claim a quantum of read ids, submit it, complete."""
     quanta = [shard_ids[i: i + batch] for i in range(0, len(shard_ids), batch)]
     q = WorkQueue(len(quanta), lease_s=lease_s)
@@ -70,19 +94,18 @@ def _run_offline(engine: ServeEngine, reads, shard_ids, *, batch: int,
             sess.submit(reads[gid], meta=int(gid))
         for gid, res in sess.drain():
             if res.position >= 0:
-                rows[gid] = paf_row(gid, res, len(engine.index.index.ref))
+                rows[gid] = row_fn(gid, res)
         q.complete(b)
     return [rows[g] for g in sorted(rows)]
 
 
 def _run_online(engine: ServeEngine, reads, shard_ids, *, rate_rps: float,
-                seed: int) -> tuple[list[dict], object]:
+                seed: int, row_fn) -> tuple[list[dict], object]:
     """Poisson open-loop path through the engine's admission queue."""
     rep = poisson_load(engine, [reads[g] for g in shard_ids],
                        rate_rps=rate_rps, seed=seed,
                        metas=[int(g) for g in shard_ids])
-    ref_len = len(engine.index.index.ref)
-    rows = [paf_row(gid, res, ref_len) for gid, res in rep.results
+    rows = [row_fn(gid, res) for gid, res in rep.results
             if res.position >= 0]
     return sorted(rows, key=lambda r: r["gid"]), rep
 
@@ -95,13 +118,20 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--profile", default="illumina",
                     choices=list(simulate.PROFILES))
-    ap.add_argument("--out", default=None, help="PAF output path")
+    ap.add_argument("--out", default=None, help="PAF/GAF output path")
     ap.add_argument("--lease-s", type=float, default=600.0,
                     help="work-queue lease; expired leases are stolen")
+    ap.add_argument("--mode", default="linear", choices=("linear", "graph"),
+                    help="linear reference → PAF, or variation graph → GAF "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--variants", type=int, default=None,
+                    help="--mode graph: simulated variant count "
+                         "(default ref_len // 200)")
     ap.add_argument("--align-backend", default="auto",
                     help="repro.align backend: auto|ref|lax|pallas_dc|"
-                         "pallas_dc_v2 (auto = Pallas on TPU/GPU, lax on "
-                         "CPU; env REPRO_ALIGN_BACKEND overrides auto)")
+                         "pallas_dc_v2|graph_lax|graph_pallas (auto = Pallas "
+                         "on TPU/GPU, lax on CPU, graph twins under --mode "
+                         "graph; env REPRO_ALIGN_BACKEND overrides auto)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="deprecated alias for --align-backend pallas_dc")
     ap.add_argument("--online", action="store_true",
@@ -117,8 +147,6 @@ def main(argv=None):
 
     prof = simulate.PROFILES[args.profile]
     ref = simulate.random_reference(args.ref_len, seed=1)
-    print(f"indexing reference ({args.ref_len} bp)...")
-    epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
     rs = simulate.simulate_reads(ref, n_reads=args.reads,
                                  read_len=args.read_len, profile=prof, seed=2)
     buckets = tuple(int(b) for b in args.buckets.split(","))
@@ -130,11 +158,33 @@ def main(argv=None):
                  "pallas_dc; don't combine it with an explicit "
                  "--align-backend")
     backend = "pallas_dc" if args.use_kernel else args.align_backend
+    genasm = GenASMConfig()
+
+    if args.mode == "graph":
+        from repro.graph import index as graph_index
+
+        n_var = args.variants if args.variants is not None \
+            else max(args.ref_len // 200, 4)
+        variants = simulate.simulate_variants(
+            ref, n_snp=n_var // 2, n_ins=n_var // 4, n_del=n_var // 4, seed=3)
+        print(f"indexing variation graph ({args.ref_len} bp backbone, "
+              f"{len(variants)} variants)...")
+        epi = graph_index.build_epoched_graph_index(
+            ref, variants, w=8, k=12,
+            window=max(buckets) + 2 * genasm.w)  # largest bucket's t_cap
+        row_fn, writer = gaf_row, io.write_gaf
+    else:
+        print(f"indexing reference ({args.ref_len} bp)...")
+        epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
+        row_fn = lambda gid, res: paf_row(gid, res, args.ref_len)  # noqa: E731
+        writer = io.write_paf
+
     cfg = EngineConfig(
         buckets=buckets, max_batch=args.batch,
         max_delay_s=args.max_delay_ms / 1e3,
-        genasm=GenASMConfig(),
+        genasm=genasm,
         align_backend=backend,
+        workload=args.mode,
         filter_k=max(8, int(args.read_len * prof.error_rate * 1.5)),
         minimizer_w=8, minimizer_k=12)
 
@@ -146,12 +196,13 @@ def main(argv=None):
         t0 = time.time()
         if args.online:
             rows, rep = _run_online(engine, rs.reads, shard_ids,
-                                    rate_rps=args.rate, seed=7)
+                                    rate_rps=args.rate, seed=7, row_fn=row_fn)
             print(f"online: {rep.reads_per_s:.1f} reads/s, "
                   f"p50 {rep.p50_ms:.1f} ms, p99 {rep.p99_ms:.1f} ms")
         else:
             rows = _run_offline(engine, rs.reads, shard_ids,
-                                batch=args.batch, lease_s=args.lease_s)
+                                batch=args.batch, lease_s=args.lease_s,
+                                row_fn=row_fn)
         dt = time.time() - t0
         m = engine.metrics.snapshot()
         hit_rate = engine.cache.hit_rate
@@ -169,7 +220,7 @@ def main(argv=None):
           f"{waste / max(useful + waste, 1):.1%}, "
           f"cache hit rate {hit_rate:.1%}")
     if args.out:
-        io.write_paf(args.out, strip_gids(rows))
+        writer(args.out, strip_gids(rows))
         print(f"wrote {args.out}")
 
 

@@ -61,6 +61,13 @@ class EngineConfig:
     resolves per platform at engine construction); it is part of the
     executor-cache key, so switching backends never reuses a stale
     compiled executor.
+
+    ``workload`` selects what a bucket executor compiles: ``"linear"``
+    (`core/mapper.map_batch` against an `EpochedIndex`) or ``"graph"``
+    (`repro.graph.mapper.map_batch` against an `EpochedGraphIndex`,
+    results carrying the node path for GAF).  It is part of the
+    executor-cache key; linear backend names resolve to their graph
+    twins under the graph workload (``lax`` → ``graph_lax``, …).
     """
 
     buckets: tuple[int, ...] = (160, 320, 640, 1280)
@@ -68,6 +75,7 @@ class EngineConfig:
     max_delay_s: float = 0.005
     genasm: GenASMConfig = GenASMConfig()
     align_backend: str = "auto"
+    workload: str = "linear"
     filter_bits: int = 128
     filter_k: int = 12
     max_candidates: int = 4
@@ -85,6 +93,9 @@ class EngineConfig:
                              f"got {self.buckets}")
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.workload not in ("linear", "graph"):
+            raise ValueError(f"workload must be 'linear' or 'graph', got "
+                             f"{self.workload!r}")
         object.__setattr__(self, "buckets", tuple(sorted(set(self.buckets))))
 
     def bucket_for(self, length: int) -> int:
@@ -106,6 +117,7 @@ class ServeResult(NamedTuple):
     bucket_cap: int
     cached: bool
     latency_s: float
+    path: np.ndarray | None = None  # graph workload: node ids per op (-1=I)
 
 
 @dataclass
@@ -121,10 +133,27 @@ class _Request:
 class ServeEngine:
     """Admission queue + per-bucket micro-batcher over `mapper.map_batch`."""
 
-    def __init__(self, index: EpochedIndex | ReferenceIndex,
+    def __init__(self, index,
                  config: EngineConfig = EngineConfig(),
                  metrics: Metrics | None = None):
-        if not isinstance(index, EpochedIndex):
+        def check_minimizer(kw):
+            if (kw["w"], kw["k"]) != (config.minimizer_w, config.minimizer_k):
+                raise ValueError(
+                    f"index built with minimizer w={kw['w']}/k={kw['k']} but "
+                    f"engine seeds with w={config.minimizer_w}/"
+                    f"k={config.minimizer_k}; hashes would never match")
+
+        if config.workload == "graph":
+            from repro.graph.index import EpochedGraphIndex, GraphIndex
+
+            if isinstance(index, GraphIndex):
+                index = EpochedGraphIndex(index)
+            elif not isinstance(index, EpochedGraphIndex):
+                raise TypeError(
+                    f"graph workload needs a GraphIndex/EpochedGraphIndex, "
+                    f"got {type(index).__name__}")
+            check_minimizer(index._build_kw)
+        elif not isinstance(index, EpochedIndex):
             # a bare ReferenceIndex carries no build params, so the engine
             # assumes it was built with config.minimizer_w/k (prefer
             # build_epoched_index, which records the actual params and is
@@ -132,20 +161,20 @@ class ServeEngine:
             index = EpochedIndex(index, w=config.minimizer_w,
                                  k=config.minimizer_k)
         else:
-            kw = index._build_kw
-            if (kw["w"], kw["k"]) != (config.minimizer_w, config.minimizer_k):
-                raise ValueError(
-                    f"index built with minimizer w={kw['w']}/k={kw['k']} but "
-                    f"engine seeds with w={config.minimizer_w}/"
-                    f"k={config.minimizer_k}; hashes would never match")
+            check_minimizer(index._build_kw)
         self.index = index
         self.config = config
         # resolve "auto" once: the executor-cache key and every flush use
         # the same concrete backend for the engine's whole lifetime
         from repro import align as align_dispatch
 
-        self.align_backend = align_dispatch.resolve_backend(
-            config.align_backend).name
+        if config.workload == "graph":
+            from repro.graph.mapper import graph_backend_name
+
+            self.align_backend = graph_backend_name(config.align_backend)
+        else:
+            self.align_backend = align_dispatch.resolve_backend(
+                config.align_backend).name
         self.metrics = metrics or Metrics()
         self.cache = ResultCache(config.cache_capacity)
         self._queues: dict[int, list[_Request]] = {c: [] for c in config.buckets}
@@ -179,6 +208,7 @@ class ServeEngine:
         if hit is not None:
             fut.set_result(hit._replace(
                 cached=True, ops=hit.ops.copy(),  # callers own their arrays
+                path=None if hit.path is None else hit.path.copy(),
                 latency_s=time.monotonic() - t0))
             return fut
         req = _Request(read=read, length=len(read),
@@ -238,16 +268,20 @@ class ServeEngine:
         self.close()
 
     # ----------------------------------------------------- executor cache ----
-    def _executor_key(self, cap: int) -> tuple:
+    def _executor_key(self, cap: int, stride: int | None = None) -> tuple:
         c = self.config
-        return (cap, self.align_backend, c.genasm, min(c.filter_bits, cap),
-                c.filter_k, c.max_candidates, c.minimizer_w, c.minimizer_k,
-                c.max_batch)
+        return (cap, c.workload, self.align_backend, c.genasm,
+                min(c.filter_bits, cap), c.filter_k, c.max_candidates,
+                c.minimizer_w, c.minimizer_k, c.max_batch, stride)
 
-    def _executor(self, cap: int):
-        """One jitted ``map_batch`` per (bucket_cap, backend, config) —
-        built lazily."""
-        key = self._executor_key(cap)
+    def _executor(self, cap: int, stride: int | None = None):
+        """One jitted ``map_batch`` per (bucket_cap, workload, backend,
+        config) — built lazily.  ``stride`` is the graph index's
+        tile_stride *at flush time*: it is baked into the jitted closure,
+        so it rides in the key — a refresh() that re-tiles the graph at a
+        new pitch gets a fresh executor instead of silently mis-gathering
+        through a stale one."""
+        key = self._executor_key(cap, stride)
         fn = self._executors.get(key)
         if fn is None:
             c = self.config
@@ -263,15 +297,27 @@ class ServeEngine:
                     align_dispatch.autotune(backend, cap, c.genasm.k,
                                             batch=c.max_batch, cfg=c.genasm)
 
-            def run(index, arr, lens, _cap=cap):
-                # body executes at trace time only → counts retraces
-                self.trace_counts[_cap] = self.trace_counts.get(_cap, 0) + 1
-                return mapper.map_batch(
-                    index, arr, lens, cfg=c.genasm, p_cap=_cap,
-                    filter_bits=fbits, filter_k=c.filter_k,
-                    max_candidates=c.max_candidates,
-                    minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
-                    backend=backend)
+            if c.workload == "graph":
+                from repro.graph import mapper as graph_mapper
+
+                def run(arrays, arr, lens, _cap=cap):
+                    # body executes at trace time only → counts retraces
+                    self.trace_counts[_cap] = self.trace_counts.get(_cap, 0) + 1
+                    return graph_mapper.map_batch(
+                        arrays, arr, lens, tile_stride=stride, cfg=c.genasm,
+                        p_cap=_cap, filter_bits=fbits, filter_k=c.filter_k,
+                        max_candidates=c.max_candidates,
+                        minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
+                        backend=backend)
+            else:
+                def run(index, arr, lens, _cap=cap):
+                    self.trace_counts[_cap] = self.trace_counts.get(_cap, 0) + 1
+                    return mapper.map_batch(
+                        index, arr, lens, cfg=c.genasm, p_cap=_cap,
+                        filter_bits=fbits, filter_k=c.filter_k,
+                        max_candidates=c.max_candidates,
+                        minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
+                        backend=backend)
 
             fn = jax.jit(run)
             self._executors[key] = fn
@@ -350,14 +396,21 @@ class ServeEngine:
     def _execute(self, cap: int, reqs: list[_Request]) -> None:
         c = self.config
         index, epoch = self.index.current()
+        if c.workload == "graph":
+            payload = index.arrays
+            fn = self._executor(cap, index.tile_stride)
+        else:
+            payload = index
+            fn = self._executor(cap)
         arr, lens = encode.batch_reads(
             [r.read for r in reqs]
             + [np.zeros(0, np.int8)] * (c.max_batch - len(reqs)), cap)
-        res = self._executor(cap)(index, arr, lens)
+        res = fn(payload, arr, lens)
         pos = np.asarray(res.position)
         dist = np.asarray(res.distance)
         ops = np.asarray(res.ops)
         n_ops = np.asarray(res.n_ops)
+        paths = (np.asarray(res.path) if c.workload == "graph" else None)
 
         m = self.metrics
         m.counter("batches_flushed").inc()
@@ -376,7 +429,8 @@ class ServeEngine:
                 position=int(pos[i]), distance=int(dist[i]),
                 ops=ops[i].copy(), n_ops=int(n_ops[i]),
                 read_len=int(lens[i]), bucket_cap=cap, cached=False,
-                latency_s=done - r.t_submit)
+                latency_s=done - r.t_submit,
+                path=None if paths is None else paths[i].copy())
             self.cache.put(r.read, epoch, out, digest=r.digest)
             m.histogram("latency_s").observe(out.latency_s)
             results.append(out)

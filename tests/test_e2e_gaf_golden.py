@@ -1,0 +1,64 @@
+"""Golden end-to-end regression: serve_genomics GAF output is byte-stable.
+
+The graph twin of ``test_e2e_paf_golden.py``: the full service driver
+(simulate → variation-graph index → engine → GAF) on a fixed-seed read
+set must write bytes identical to ``tests/data/serve_graph_golden.gaf``
+— across the offline WorkQueue drain and the ``--online`` Poisson path,
+and across the ``graph_lax``/``graph_pallas`` backends (interpret mode
+on CPU).  Any backend divergence or accidental mapping change shows up
+as a diff against one committed file.
+
+Regenerate the snapshot (after an *intentional* output change) with:
+
+    PYTHONPATH=src python -m repro.launch.serve_genomics \
+        --mode graph --ref-len 3000 --reads 10 --read-len 100 --batch 4 \
+        --buckets 128 --align-backend graph_lax \
+        --out tests/data/serve_graph_golden.gaf
+"""
+import pathlib
+
+import pytest
+
+from repro.launch import serve_genomics
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "serve_graph_golden.gaf"
+BASE_ARGS = [
+    "--mode", "graph", "--ref-len", "3000", "--reads", "10",
+    "--read-len", "100", "--batch", "4", "--buckets", "128",
+]
+
+
+def _run_gaf(tmp_path, backend: str, *, online: bool = False) -> bytes:
+    out = tmp_path / f"{backend}{'_online' if online else ''}.gaf"
+    argv = BASE_ARGS + ["--align-backend", backend, "--out", str(out)]
+    if online:
+        argv += ["--online", "--rate", "2000"]
+    serve_genomics.main(argv)
+    return out.read_bytes()
+
+
+@pytest.mark.parametrize("backend", ["graph_lax", "graph_pallas"])
+def test_offline_gaf_matches_golden(tmp_path, backend):
+    assert _run_gaf(tmp_path, backend) == GOLDEN.read_bytes(), \
+        f"offline GAF for backend {backend} diverged from the snapshot"
+
+
+def test_online_gaf_matches_golden(tmp_path):
+    """The online Poisson path must emit the same GAF as the offline
+    drain (same engine underneath) regardless of arrival timing."""
+    assert _run_gaf(tmp_path, "graph_lax", online=True) == \
+        GOLDEN.read_bytes(), "online GAF diverged from the snapshot"
+
+
+def test_gaf_rows_are_valid_gaf(tmp_path):
+    """Every row: 12 tab columns + cg tag, path matches ([><]seg)+."""
+    import re
+
+    data = GOLDEN.read_text().strip().split("\n")
+    assert len(data) == 10
+    for line in data:
+        cols = line.split("\t")
+        assert len(cols) == 13
+        assert re.fullmatch(r"([><][^\s><]+)+", cols[5])
+        assert int(cols[6]) == int(cols[8]) - int(cols[7])  # plen == pend-pstart
+        assert cols[12].startswith("cg:Z:")

@@ -11,11 +11,12 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kernel_dc        — Ch. 5 BitMAc kernel analysis
   align_dispatch   — repro.align backend dispatch (lax vs pallas_dc*)
   serve_engine     — micro-batching engine under Poisson arrivals
+  shard_scaling    — reads/s vs 1/2/4 reference shards (repro.shard)
   roofline         — §Roofline table from the multi-pod dry-run
 
 ``--smoke`` runs the CI-sized subset (align_dispatch + serve_engine +
-segram_e2e + graph_serve) and ``--json PATH`` writes their summaries
-into one artifact:
+segram_e2e + graph_serve + shard_scaling) and ``--json PATH`` writes
+their summaries into one artifact:
 
     PYTHONPATH=src python benchmarks/run.py --smoke --json bench_summary.json
 """
@@ -33,7 +34,8 @@ if __package__ in (None, ""):  # script-style: python benchmarks/run.py
     __package__ = "benchmarks"
 
 # modules with a --smoke flag and a summary-dict return (the CI subset)
-SMOKE_MODS = ("align_dispatch", "serve_engine", "segram_e2e", "graph_serve")
+SMOKE_MODS = ("align_dispatch", "serve_engine", "segram_e2e", "graph_serve",
+              "shard_scaling")
 
 
 def main(argv=None) -> None:
@@ -48,7 +50,7 @@ def main(argv=None) -> None:
 
     from . import (align_dispatch, bitalign, edit_distance, graph_serve,
                    kernel_dc, prealign_filter, read_alignment, roofline,
-                   segram_e2e, serve_engine)
+                   segram_e2e, serve_engine, shard_scaling)
 
     mods = {
         "read_alignment": read_alignment,
@@ -60,6 +62,7 @@ def main(argv=None) -> None:
         "kernel_dc": kernel_dc,
         "align_dispatch": align_dispatch,
         "serve_engine": serve_engine,
+        "shard_scaling": shard_scaling,
         "roofline": roofline,
     }
     summaries: dict[str, object] = {}

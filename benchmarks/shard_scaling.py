@@ -1,0 +1,182 @@
+"""Reference-sharding throughput: reads/s vs 1/2/4 host-platform shards.
+
+Measures bucket-executor mapping throughput (engine admission excluded)
+at a *filter-dominated* operating point — a large per-read candidate
+budget, the high-sensitivity regime the paper's GenASM-DC pre-alignment
+filter exists for (§4.10.3: many candidate locations per read).  At 1
+shard the whole seed/vote/filter stage serializes on one device; at N
+shards each device filters ``candidates / N`` of the budget over its
+slice of the reference in parallel (``shard_map`` scatter), the host
+merges winners, and one batched align call finishes — so the filter
+stage strong-scales while the align stage is the Amdahl floor (sharded
+and single paths run the identical align program).
+
+Needs ``jax.device_count() >= 4``; when launched with fewer devices it
+re-execs itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (XLA fixes the
+device count at first backend use, so an in-process flag flip cannot
+work from the combined harness).
+
+    PYTHONPATH=src python benchmarks/shard_scaling.py            # full
+    PYTHONPATH=src python benchmarks/shard_scaling.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+try:
+    from .common import row
+except ImportError:  # script-style: python benchmarks/shard_scaling.py
+    from common import row
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _measure(*, ref_len, n_reads, read_len, p_cap, candidates, reps, seed):
+    """Time single-device vs sharded mapping on one seeded read batch."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import shard
+    from repro.core import mapper, minimizer_index
+    from repro.core.genasm import GenASMConfig
+    from repro.genomics import encode, simulate
+
+    cfg = GenASMConfig()
+    common = dict(p_cap=p_cap, filter_bits=128, filter_k=12)
+    ref = simulate.random_reference(ref_len, seed=seed)
+    rs = simulate.simulate_reads(ref, n_reads=n_reads, read_len=read_len,
+                                 profile=simulate.ILLUMINA, seed=seed + 1)
+    arr, lens = encode.batch_reads(list(rs.reads), p_cap)
+    epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
+
+    def timed(fn):
+        res = fn()  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = fn()
+        dt = (time.perf_counter() - t0) / reps
+        return res, dt
+
+    out = {}
+    for s in SHARD_COUNTS:
+        if s == 1:
+            jarr, jlens = jnp.asarray(arr), jnp.asarray(lens)
+            fit = jax.jit(lambda i, a, le: mapper.map_batch(
+                i, a, le, cfg=cfg, max_candidates=candidates,
+                minimizer_w=8, minimizer_k=12, backend="lax", **common))
+
+            def call():
+                return jax.tree_util.tree_map(
+                    np.asarray, fit(epi.index, jarr, jlens))
+        else:
+            esi = shard.from_epoched(epi, s)
+            ex = shard.ShardedMapExecutor(
+                esi.index, cfg=cfg,
+                shard_candidates=max(1, candidates // s),
+                backend="lax", **common)
+            arrays = esi.index.arrays
+
+            def call(ex=ex, arrays=arrays):
+                return ex(arrays, arr, lens)
+
+        res, dt = timed(call)
+        out[str(s)] = {
+            "reads_per_s": round(n_reads / dt, 2),
+            "ms_per_batch": round(dt * 1e3, 2),
+            "mapped": int((res.position >= 0).sum()),
+            "spmd": bool(s > 1 and jax.device_count() >= s),
+        }
+    return {
+        "ref_len": ref_len, "n_reads": n_reads, "read_len": read_len,
+        "p_cap": p_cap, "candidates": candidates, "reps": reps,
+        "seed": seed, "devices": jax.device_count(),
+        "shards": out,
+        "speedup_2shards_vs_1": round(
+            out["2"]["reads_per_s"] / out["1"]["reads_per_s"], 3),
+        "speedup_4shards_vs_1": round(
+            out["4"]["reads_per_s"] / out["1"]["reads_per_s"], 3),
+    }
+
+
+def _needs_respawn() -> bool:
+    import jax
+
+    return jax.device_count() < max(SHARD_COUNTS)
+
+
+def _respawn(argv, json_path) -> dict:
+    """Re-exec with forced host devices; the child writes the JSON."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{max(SHARD_COUNTS)}").strip()
+    cmd = [sys.executable, os.path.abspath(__file__),
+           *argv, "--json", json_path, "--_no-respawn"]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"shard_scaling worker failed:\n{proc.stderr[-2000:]}")
+    with open(json_path) as f:
+        return json.load(f)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (smaller reference, fewer reps)")
+    ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--seed", type=int, default=17)
+    ap.add_argument("--_no-respawn", dest="no_respawn", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: already re-execed
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        params = dict(ref_len=160_000, n_reads=32, read_len=100, p_cap=128,
+                      candidates=64, reps=4)
+    else:
+        params = dict(ref_len=1_000_000, n_reads=64, read_len=100, p_cap=128,
+                      candidates=64, reps=8)
+
+    if not args.no_respawn and _needs_respawn():
+        import tempfile
+
+        json_path = args.json
+        if json_path is None:
+            fd, json_path = tempfile.mkstemp(suffix="_shard_scaling.json")
+            os.close(fd)
+        child_argv = (["--smoke"] if args.smoke else []) \
+            + ["--seed", str(args.seed)]
+        try:
+            out = _respawn(child_argv, json_path)
+        finally:
+            if args.json is None:
+                os.unlink(json_path)
+    else:
+        out = _measure(seed=args.seed, **params)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"wrote {args.json}")
+
+    base = out["shards"]["1"]["reads_per_s"]
+    for s in SHARD_COUNTS:
+        r = out["shards"][str(s)]
+        row(f"shard_scaling_s{s}", 1e6 / max(r["reads_per_s"], 1e-9),
+            f"reads_per_s={r['reads_per_s']};mapped={r['mapped']}/"
+            f"{out['n_reads']};speedup={r['reads_per_s'] / base:.2f}x;"
+            f"spmd={r['spmd']}")
+    row("shard_scaling_speedup", 0.0,
+        f"4shards_vs_1={out['speedup_4shards_vs_1']}x;"
+        f"2shards_vs_1={out['speedup_2shards_vs_1']}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

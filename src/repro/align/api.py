@@ -68,10 +68,12 @@ def register_backend(name: str, fn: Callable, *, uses_pallas: bool = False,
 
 
 def available_backends() -> tuple[str, ...]:
+    """Names of every registered alignment backend, registration order."""
     return tuple(_REGISTRY)
 
 
 def get_backend(name: str) -> Backend:
+    """Registered :class:`Backend` for ``name`` (ValueError if unknown)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -156,6 +158,7 @@ def autotune(backend: str, bucket_cap: int, k: int, *,
 
 
 def clear_autotune_cache() -> None:
+    """Drop every cached block size (tests / re-tuning on new hardware)."""
     _BLOCK_CACHE.clear()
 
 

@@ -23,6 +23,9 @@ from .genasm_dc import bitap_search
 from .minimizer_index import ReferenceIndex, build_reference_index  # noqa: F401
 from .segram.minimizer import seed_candidates
 
+# lexicographic-selection sentinel: masked-out candidates sort last
+POS_SENTINEL = jnp.iinfo(jnp.int32).max
+
 
 class MapResult(NamedTuple):
     position: jnp.ndarray  # int32 mapped reference start (-1 if unmapped)
@@ -38,6 +41,108 @@ class SeedFilterResult(NamedTuple):
     text: jnp.ndarray  # [t_cap] int8 reference region at position
     t_len: jnp.ndarray  # int32 valid text length
     pattern: jnp.ndarray  # [p_cap] int8 wildcard-padded read
+    distance: jnp.ndarray = jnp.int32(0)  # int32 winning filter distance
+
+
+def lex_best(fd: jnp.ndarray, fpos: jnp.ndarray) -> jnp.ndarray:
+    """Index of the lexicographically-minimal ``(fd, fpos)`` candidate.
+
+    The selection rule must be *shard-layout independent*: candidates
+    merged from per-shard seeding (`repro.shard`) arrive in a different
+    order than single-index seeding produces, so "argmin with
+    first-wins ties" would pick different winners at 1 vs N shards.
+    Minimizing ``(distance, position)`` makes the winner a pure
+    function of the candidate *set*, and collapses the duplicate
+    candidates that shard-overlap margins produce (identical
+    ``(fd, fpos)`` pairs dedup to whichever index argmin returns —
+    their downstream alignment windows are byte-identical).
+    """
+    pm = jnp.where(fd == jnp.min(fd), fpos, POS_SENTINEL)
+    return jnp.argmin(pm)
+
+
+def seed_filter_read(
+    ref_buf: jnp.ndarray,
+    ref_offset,
+    ref_len: int,
+    hashes: jnp.ndarray,
+    positions: jnp.ndarray,
+    read: jnp.ndarray,
+    read_len,
+    *,
+    p_cap: int,
+    t_cap: int,
+    filter_bits: int,
+    filter_k: int,
+    max_candidates: int,
+    minimizer_w: int,
+    minimizer_k: int,
+) -> SeedFilterResult:
+    """Seed + pre-alignment-filter one read against one reference buffer.
+
+    ``ref_buf`` is an ``[Lb] int8`` reference slice whose first base sits
+    at global coordinate ``ref_offset`` of a reference of total length
+    ``ref_len``; ``hashes``/``positions`` are a sorted minimizer table
+    whose positions are *global* coordinates.  The whole-reference
+    mapper calls this with ``ref_offset=0`` and the sharded mapper with
+    each shard's haloed slice — the shared body is what keeps 1-shard
+    and N-shard filter distances, refined positions, and window bytes
+    bit-identical (positions are compared and emitted in global
+    coordinates throughout).
+
+    Returns a :class:`SeedFilterResult` whose ``position`` is the
+    global refined start of the lexicographically best ``(distance,
+    position)`` candidate (``POS_SENTINEL`` if the read produced no
+    seed hits), with the ``[t_cap]`` alignment text sliced from
+    ``ref_buf``.
+    """
+    starts, votes = seed_candidates(
+        read, hashes, positions,
+        w=minimizer_w, k=minimizer_k, max_candidates=max_candidates,
+    )
+    # candidate starts are diagonal-bucketed to 32 (minimizer voting), so the
+    # filter window must absorb bucket quantization + k edits of drift
+    margin = filter_k + 32
+
+    # --- pre-alignment filter (use case 2): exact distance of the read's
+    # first filter_bits bases against each candidate region prefix.
+    fpat = jnp.where(
+        jnp.arange(filter_bits) < jnp.minimum(read_len, filter_bits),
+        read[:filter_bits], WILDCARD,
+    ).astype(jnp.int8)
+    region_pad = jnp.concatenate(
+        [ref_buf, jnp.full((filter_bits + 2 * margin,), SENTINEL, jnp.int8)])
+
+    def filt(s):
+        s0 = jnp.clip(s - margin, 0, jnp.maximum(ref_len - 1, 0))
+        region = jax.lax.dynamic_slice(
+            region_pad, (s0 - ref_offset,), (filter_bits + 2 * margin,))
+        dists = bitap_search(region, fpat, m_bits=filter_bits, k=filter_k)
+        return jnp.min(dists), s0 + jnp.argmin(dists).astype(jnp.int32)
+
+    fd, fpos = jax.vmap(filt)(starts)
+    fd = jnp.where(votes > 0, fd, filter_k + 1)
+    fpos = jnp.where(votes > 0, fpos, POS_SENTINEL)
+    best = lex_best(fd, fpos)
+    pos = fpos[best]
+    prefilter_ok = fd[best] <= filter_k
+
+    text = jax.lax.dynamic_slice(
+        jnp.concatenate([ref_buf, jnp.full((t_cap,), SENTINEL, jnp.int8)]),
+        (jnp.minimum(pos, ref_len) - ref_offset,), (t_cap,),
+    )
+    r = read[:p_cap]
+    if r.shape[0] < p_cap:
+        r = jnp.pad(r, (0, p_cap - r.shape[0]), constant_values=WILDCARD)
+    pat = jnp.where(jnp.arange(p_cap) < read_len, r, WILDCARD).astype(jnp.int8)
+    return SeedFilterResult(
+        position=pos.astype(jnp.int32),
+        prefilter_ok=prefilter_ok,
+        text=text,
+        t_len=jnp.clip(ref_len - pos, 0, t_cap).astype(jnp.int32),
+        pattern=pat,
+        distance=fd[best].astype(jnp.int32),
+    )
 
 
 def _seed_and_filter_one(
@@ -53,57 +158,12 @@ def _seed_and_filter_one(
     minimizer_w: int,
     minimizer_k: int,
 ) -> SeedFilterResult:
-    starts, votes = seed_candidates(
-        read,
-        index.hashes,
-        index.positions,
-        w=minimizer_w,
-        k=minimizer_k,
-        max_candidates=max_candidates,
-    )
-    L = index.ref.shape[0]
-    # candidate starts are diagonal-bucketed to 32 (minimizer voting), so the
-    # filter window must absorb bucket quantization + k edits of drift
-    margin = filter_k + 32
-
-    # --- pre-alignment filter (use case 2): exact distance of the read's
-    # first filter_bits bases against each candidate region prefix.
-    fpat = jnp.where(
-        jnp.arange(filter_bits) < jnp.minimum(read_len, filter_bits),
-        read[:filter_bits], WILDCARD,
-    ).astype(jnp.int8)
-
-    def filt(s):
-        s0 = jnp.clip(s - margin, 0, jnp.maximum(L - 1, 0))
-        region = jax.lax.dynamic_slice(
-            jnp.concatenate([index.ref, jnp.full((filter_bits + 2 * margin,),
-                                                 SENTINEL, jnp.int8)]),
-            (s0,), (filter_bits + 2 * margin,),
-        )
-        dists = bitap_search(region, fpat, m_bits=filter_bits, k=filter_k)
-        return jnp.min(dists), s0 + jnp.argmin(dists)
-
-    fd, fpos = jax.vmap(filt)(starts)
-    fd = jnp.where(votes > 0, fd, filter_k + 1)
-    best = jnp.argmin(fd)
-    pos = fpos[best]
-    prefilter_ok = fd[best] <= filter_k
-
-    text = jax.lax.dynamic_slice(
-        jnp.concatenate([index.ref, jnp.full((t_cap,), SENTINEL, jnp.int8)]),
-        (pos,), (t_cap,),
-    )
-    r = read[:p_cap]
-    if r.shape[0] < p_cap:
-        r = jnp.pad(r, (0, p_cap - r.shape[0]), constant_values=WILDCARD)
-    pat = jnp.where(jnp.arange(p_cap) < read_len, r, WILDCARD).astype(jnp.int8)
-    return SeedFilterResult(
-        position=pos.astype(jnp.int32),
-        prefilter_ok=prefilter_ok,
-        text=text,
-        t_len=jnp.minimum(L - pos, t_cap).astype(jnp.int32),
-        pattern=pat,
-    )
+    return seed_filter_read(
+        index.ref, jnp.int32(0), index.ref.shape[0],
+        index.hashes, index.positions, read, read_len,
+        p_cap=p_cap, t_cap=t_cap, filter_bits=filter_bits,
+        filter_k=filter_k, max_candidates=max_candidates,
+        minimizer_w=minimizer_w, minimizer_k=minimizer_k)
 
 
 @partial(

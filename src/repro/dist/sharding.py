@@ -212,3 +212,33 @@ def shard_put(tree, mesh, specs=None):
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))
     return jax.device_put(tree, shardings)
+
+
+def stacked_specs(tree, mesh, *, axis: str = "shard"):
+    """Specs for shard-stacked arrays: dim 0 over ``axis``, rest replicated.
+
+    `repro.shard` stacks every per-shard reference array along a leading
+    ``[num_shards, ...]`` axis; this resolves that convention against a
+    1-D ``(axis,)`` mesh through the same `_fit` rules as the model
+    params (a mesh without the axis, or a leading dim the axis size
+    does not divide, degrades to replication instead of failing).
+    """
+    return jax.tree.map(
+        lambda a: _fit(mesh, a.shape, (axis,) + (None,) * (len(a.shape) - 1)),
+        tree)
+
+
+def shard_mesh(num_shards: int, *, axis: str = "shard"):
+    """1-D device mesh over the first ``num_shards`` devices, or None.
+
+    Returns None when fewer than ``num_shards`` devices exist (callers
+    fall back to a vmapped single-device execution of the same
+    program) or when ``num_shards == 1`` (nothing to place).
+    """
+    import numpy as np
+
+    if num_shards <= 1 or jax.device_count() < num_shards:
+        return None
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:num_shards]), (axis,))

@@ -10,6 +10,15 @@ alignment of each read's best window through `repro.align.align_batch`
 offline toy, which vmaps a per-candidate whole-window scan inside every
 read — here the candidate axis is folded into the batch, so the kernel
 sees one launch per stage instead of ``B × max_candidates`` traces.
+
+The candidate stage (:func:`graph_candidate_stage`) is written against a
+:class:`GraphView` — local tile/backbone slices plus the global offsets
+of their first rows — so the whole-graph mapper and the sharded mapper
+(`repro.shard.graph_mapper`) run the *same* seeding/filter/selection
+code: per-candidate distances, refined anchors, and window bytes are
+bit-identical at 1 and N shards, and the winner is chosen by the
+shard-order-independent lexicographic rule ``min (distance, origin,
+tile)`` in global coordinates.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.bitvector import WILDCARD
 from repro.core.genasm import GenASMConfig
+from repro.core.mapper import POS_SENTINEL
 from repro.core.segram.graph import HOP_LIMIT
 from repro.core.segram.minimizer import seed_candidates
 
@@ -43,12 +53,66 @@ def graph_backend_name(backend: str | None = None) -> str:
 
 
 class GraphMapResult(NamedTuple):
+    """Batched graph-mapping outcome (the GAF-row payload).
+
+    ``position``/``distance`` are ``-1`` for unmapped reads; ``path``
+    holds global node ids per CIGAR op (``-1`` for insertions/padding).
+    """
+
     position: jnp.ndarray  # int32 backbone coord of first aligned node (-1)
     distance: jnp.ndarray  # int32 edit distance (-1 if unmapped)
     ops: jnp.ndarray  # packed CIGAR
     n_ops: jnp.ndarray
     path: jnp.ndarray  # [B, cap] int32 global node ids per op (-1 for I/pad)
     failed: jnp.ndarray
+
+
+class GraphView(NamedTuple):
+    """One shard's (or the whole graph's) view of a tiled graph index.
+
+    Local array slices plus the global coordinate of each slice's first
+    row; the whole-graph view has all offsets 0.  ``idx_positions`` stay
+    *global* backbone coordinates in every view — merging per-shard
+    candidates then needs no translation step.
+    """
+
+    tile_gtext: jnp.ndarray  # [Ct, tile_len] uint32 packed local tiles
+    tile_valid: jnp.ndarray  # [Ct] int32 valid node count per local tile
+    tile_base: jnp.ndarray  # int32 global tile id of local tile row 0
+    node_of_backbone: jnp.ndarray  # [Lb] int32 local backbone→node slice
+    nb_offset: jnp.ndarray  # int32 global backbone coord of slice row 0
+    backbone: jnp.ndarray  # [Nb] int32 local node→backbone slice
+    node_base: jnp.ndarray  # int32 global node id of backbone slice row 0
+    idx_hashes: jnp.ndarray  # [M] uint32 sorted minimizer hashes
+    idx_positions: jnp.ndarray  # [M] int32 GLOBAL backbone positions
+
+
+def whole_graph_view(garr: GraphArrays) -> GraphView:
+    """The trivial single-shard view: full arrays, zero offsets."""
+    zero = jnp.int32(0)
+    return GraphView(
+        tile_gtext=garr.tile_gtext, tile_valid=garr.tile_valid,
+        tile_base=zero, node_of_backbone=garr.node_of_backbone,
+        nb_offset=zero, backbone=garr.backbone, node_base=zero,
+        idx_hashes=garr.idx_hashes, idx_positions=garr.idx_positions)
+
+
+class CandidateStageResult(NamedTuple):
+    """Per-read winner of one view's seeding + GenASM-DC filter stage.
+
+    Everything downstream alignment needs travels with the winner, so
+    the align stage never touches the (possibly remote) graph arrays:
+    ``gwin`` is the packed ``[B, t_cap]`` graph text window, ``bwin``
+    the backbone coordinate of each window node (``-1`` on alt nodes).
+    """
+
+    distance: jnp.ndarray  # [B] int32 filter distance (filter_k+1 = none)
+    origin: jnp.ndarray  # [B] int32 global node id of window node 0
+    tile: jnp.ndarray  # [B] int32 global winning tile id
+    gwin: jnp.ndarray  # [B, t_cap] uint32 packed graph text window
+    bwin: jnp.ndarray  # [B, t_cap] int32 backbone coord per window node
+    t_len: jnp.ndarray  # [B] int32 valid window length
+    prefilter_ok: jnp.ndarray  # [B] bool
 
 
 def _filter_dists(wins_flat, fpat_flat, flens_flat, *, m_bits: int, k: int,
@@ -69,6 +133,159 @@ def _filter_dists(wins_flat, fpat_flat, flens_flat, *, m_bits: int, k: int,
         return dists[:bc]
     f = partial(bitalign_search, m_bits=m_bits, k=k)
     return jax.vmap(f)(bases, succ, fpat_flat, flens_flat)
+
+
+def graph_candidate_stage(
+    view: GraphView,
+    reads: jnp.ndarray,
+    read_lens: jnp.ndarray,
+    *,
+    tile_stride: int,
+    n_tiles: int,
+    backbone_len: int,
+    n_nodes: int,
+    t_cap: int,
+    filter_bits: int,
+    filter_k: int,
+    max_candidates: int,
+    minimizer_w: int,
+    minimizer_k: int,
+    use_kernel: bool = False,
+    block_bt: int | None = None,
+    interpret: bool = True,
+) -> CandidateStageResult:
+    """Seed, gather, filter, and select one view's best candidate per read.
+
+    ``reads`` is ``[B, p_cap] int8`` with ``read_lens [B] int32`` valid
+    lengths; ``n_tiles``/``backbone_len``/``n_nodes`` are the *global*
+    graph sizes (the view's local arrays may be smaller slices).  The
+    per-read winner minimizes ``(filter distance, origin node, tile)``
+    lexicographically, so merging the winners of disjoint views
+    reproduces the whole-graph winner exactly.
+    """
+    b = reads.shape[0]
+    c = max_candidates
+    n_local_tiles, tile_len = view.tile_gtext.shape
+    search_span = tile_len - t_cap
+    read_lens = read_lens.astype(jnp.int32)
+
+    # --- seed on the backbone minimizer table (global positions)
+    seed_fn = partial(seed_candidates, w=minimizer_w, k=minimizer_k,
+                      max_candidates=c)
+    starts, votes = jax.vmap(
+        lambda r: seed_fn(r, view.idx_hashes, view.idx_positions))(reads)
+
+    # backbone coordinate -> node id, with margin for leading variation
+    sb = jnp.clip(starts - HOP_LIMIT, 0, backbone_len - 1)
+    nb_len = view.node_of_backbone.shape[0]
+    node = view.node_of_backbone[
+        jnp.clip(sb - view.nb_offset, 0, nb_len - 1)]  # [B, C] global ids
+    tile_g = jnp.clip(node // tile_stride, 0, n_tiles - 1)
+    tile_local = jnp.clip(tile_g - view.tile_base, 0, n_local_tiles - 1)
+
+    # --- one gather: every candidate window for the whole batch
+    wins = view.tile_gtext[tile_local]  # [B, C, tile_len]
+
+    # --- one filter launch over the flattened candidate axis
+    fb = filter_bits
+    fpat = jnp.where(
+        jnp.arange(fb)[None, :] < jnp.minimum(read_lens, fb)[:, None],
+        reads[:, :fb], WILDCARD).astype(jnp.int8)
+    flens = jnp.minimum(read_lens, fb)
+    dists = _filter_dists(
+        wins.reshape(b * c, tile_len),
+        jnp.repeat(fpat, c, axis=0), jnp.repeat(flens, c),
+        m_bits=fb, k=filter_k, use_kernel=use_kernel, block_bt=block_bt,
+        interpret=interpret).reshape(b, c, tile_len)
+    # anchors past the search span could not fit a full alignment window
+    dists = jnp.where(jnp.arange(tile_len)[None, None, :] < search_span,
+                      dists, filter_k + 1)
+    d_c = jnp.min(dists, axis=-1)  # [B, C]
+    off_c = jnp.argmin(dists, axis=-1).astype(jnp.int32)
+    live = votes > 0
+    d_c = jnp.where(live, d_c, filter_k + 1)
+    origin_c = jnp.where(live, tile_g * tile_stride + off_c, POS_SENTINEL)
+    tile_m = jnp.where(live, tile_g, POS_SENTINEL)
+
+    # --- lexicographic winner per read: min (distance, origin, tile)
+    dm = jnp.min(d_c, axis=-1, keepdims=True)
+    om = jnp.where(d_c == dm, origin_c, POS_SENTINEL)
+    omin = jnp.min(om, axis=-1, keepdims=True)
+    tm = jnp.where(om == omin, tile_m, POS_SENTINEL)
+    ci = jnp.argmin(tm, axis=-1)  # [B]
+
+    rows = jnp.arange(b)
+    d_best = d_c[rows, ci]
+    origin = origin_c[rows, ci]
+    tile_best = tile_g[rows, ci]
+    off = off_c[rows, ci]
+    prefilter_ok = d_best <= filter_k
+
+    # --- slice the anchored alignment window out of the winning tile
+    gwin = jax.vmap(
+        lambda wbuf, o: jax.lax.dynamic_slice(wbuf, (o,), (t_cap,)))(
+        wins[rows, ci], off)
+    t_len = jnp.clip(view.tile_valid[tile_local[rows, ci]] - off, 0, t_cap)
+
+    # backbone coordinate of every window node, shipped with the window
+    # so the align stage needs no graph arrays (clip mirrors the
+    # whole-graph gather: nodes past the graph end read backbone[n-1])
+    bb_len = view.backbone.shape[0]
+    widx = origin[:, None] + jnp.arange(t_cap)[None, :]
+    bwin = view.backbone[jnp.clip(widx - view.node_base, 0, bb_len - 1)]
+    return CandidateStageResult(
+        distance=d_best.astype(jnp.int32), origin=origin,
+        tile=jnp.where(live[rows, ci], tile_best, POS_SENTINEL),
+        gwin=gwin, bwin=bwin.astype(jnp.int32),
+        t_len=t_len.astype(jnp.int32), prefilter_ok=prefilter_ok)
+
+
+def align_winners(
+    stage: CandidateStageResult,
+    reads: jnp.ndarray,
+    read_lens: jnp.ndarray,
+    *,
+    cfg: GenASMConfig,
+    p_cap: int,
+    backend: str,
+    block_bt: int | None = None,
+) -> GraphMapResult:
+    """Align the per-read winning windows and translate paths to GAF terms.
+
+    ``stage`` is a (possibly merged) :class:`CandidateStageResult`;
+    windows are ``[B, t_cap]`` packed graph text and ``bwin`` carries
+    the backbone coordinates, so this runs without the graph index —
+    the "single batched align_batch call" of the sharded design.
+    """
+    from repro import align as align_dispatch
+
+    read_lens = read_lens.astype(jnp.int32)
+    t_cap = stage.gwin.shape[-1]
+    pat = jnp.where(jnp.arange(p_cap)[None, :] < read_lens[:, None],
+                    reads[:, :p_cap], WILDCARD).astype(jnp.int8)
+    res = align_dispatch.align_batch(
+        stage.gwin, pat, read_lens, stage.t_len, cfg=cfg, backend=backend,
+        p_cap=p_cap, block_bt=block_bt)
+
+    # window-relative node offsets -> global path -> backbone position
+    rows = jnp.arange(stage.gwin.shape[0])
+    live = res.nodes >= 0
+    path = jnp.where(live, res.nodes + stage.origin[:, None], -1)
+    bpath = jnp.where(
+        live,
+        jnp.take_along_axis(stage.bwin, jnp.clip(res.nodes, 0, t_cap - 1),
+                            axis=-1), -1)
+    first = jnp.argmax(bpath >= 0, axis=-1)  # first backbone node on path
+    pos = bpath[rows, first]
+    failed = res.failed | (~stage.prefilter_ok)
+    return GraphMapResult(
+        position=jnp.where(failed, -1, pos).astype(jnp.int32),
+        distance=jnp.where(failed, -1, res.distance),
+        ops=res.ops,
+        n_ops=res.n_ops,
+        path=jnp.where(failed[:, None], -1, path),
+        failed=failed,
+    )
 
 
 def map_batch(
@@ -100,10 +317,6 @@ def map_batch(
     use_kernel = align_dispatch.get_backend(be_name).uses_pallas
     interpret = align_dispatch.needs_interpret()
 
-    b = reads.shape[0]
-    c = max_candidates
-    n = garr.bases.shape[0]
-    big_l = garr.node_of_backbone.shape[0]
     n_tiles, tile_len = garr.tile_gtext.shape
     t_cap = p_cap + 2 * cfg.w
     search_span = tile_len - t_cap
@@ -115,73 +328,18 @@ def map_batch(
     if filter_bits % 32:
         raise ValueError(f"filter_bits must be a multiple of 32, got "
                          f"{filter_bits}")
-    read_lens = read_lens.astype(jnp.int32)
 
-    # --- seed on the backbone minimizer table
-    seed_fn = partial(seed_candidates, w=minimizer_w, k=minimizer_k,
-                      max_candidates=c)
-    starts, votes = jax.vmap(
-        lambda r: seed_fn(r, garr.idx_hashes, garr.idx_positions))(reads)
-
-    # backbone coordinate -> node id, with margin for leading variation
-    sb = jnp.clip(starts - HOP_LIMIT, 0, big_l - 1)
-    node = garr.node_of_backbone[sb]  # [B, C]
-    tile = jnp.clip(node // tile_stride, 0, n_tiles - 1)
-
-    # --- one gather: every candidate window for the whole batch
-    wins = garr.tile_gtext[tile]  # [B, C, tile_len]
-
-    # --- one filter launch over the flattened candidate axis
-    fb = min(filter_bits, p_cap)
-    fpat = jnp.where(
-        jnp.arange(fb)[None, :] < jnp.minimum(read_lens, fb)[:, None],
-        reads[:, :fb], WILDCARD).astype(jnp.int8)
-    flens = jnp.minimum(read_lens, fb)
-    dists = _filter_dists(
-        wins.reshape(b * c, tile_len),
-        jnp.repeat(fpat, c, axis=0), jnp.repeat(flens, c),
-        m_bits=fb, k=filter_k, use_kernel=use_kernel, block_bt=block_bt,
-        interpret=interpret).reshape(b, c, tile_len)
-    # anchors past the search span could not fit a full alignment window
-    dists = jnp.where(jnp.arange(tile_len)[None, None, :] < search_span,
-                      dists, filter_k + 1)
-    d_c = jnp.min(dists, axis=-1)  # [B, C]
-    off_c = jnp.argmin(dists, axis=-1).astype(jnp.int32)
-    d_c = jnp.where(votes > 0, d_c, filter_k + 1)
-
-    rows = jnp.arange(b)
-    ci = jnp.argmin(d_c, axis=-1)  # best candidate per read
-    prefilter_ok = d_c[rows, ci] <= filter_k
-    off = off_c[rows, ci]  # refined anchor offset inside the tile
-    tile_b = tile[rows, ci]
-
-    # --- slice the anchored alignment window out of the winning tile
-    gwin = jax.vmap(
-        lambda wbuf, o: jax.lax.dynamic_slice(wbuf, (o,), (t_cap,)))(
-        wins[rows, ci], off)
-    t_len = jnp.clip(garr.tile_valid[tile_b] - off, 0, t_cap)
-
-    pat = jnp.where(jnp.arange(p_cap)[None, :] < read_lens[:, None],
-                    reads[:, :p_cap], WILDCARD).astype(jnp.int8)
-    res = align_dispatch.align_batch(
-        gwin, pat, read_lens, t_len, cfg=cfg, backend=be_name, p_cap=p_cap,
-        block_bt=block_bt)
-
-    # --- window-relative node offsets -> global path -> backbone position
-    origin = tile_b * tile_stride + off  # global node id of window node 0
-    path = jnp.where(res.nodes >= 0, res.nodes + origin[:, None], -1)
-    bpath = jnp.where(path >= 0, garr.backbone[jnp.clip(path, 0, n - 1)], -1)
-    first = jnp.argmax(bpath >= 0, axis=-1)  # first backbone node on the path
-    pos = bpath[rows, first]
-    failed = res.failed | (~prefilter_ok)
-    return GraphMapResult(
-        position=jnp.where(failed, -1, pos).astype(jnp.int32),
-        distance=jnp.where(failed, -1, res.distance),
-        ops=res.ops,
-        n_ops=res.n_ops,
-        path=jnp.where(failed[:, None], -1, path),
-        failed=failed,
-    )
+    stage = graph_candidate_stage(
+        whole_graph_view(garr), reads, read_lens,
+        tile_stride=tile_stride, n_tiles=n_tiles,
+        backbone_len=garr.node_of_backbone.shape[0],
+        n_nodes=garr.bases.shape[0], t_cap=t_cap,
+        filter_bits=min(filter_bits, p_cap), filter_k=filter_k,
+        max_candidates=max_candidates, minimizer_w=minimizer_w,
+        minimizer_k=minimizer_k, use_kernel=use_kernel, block_bt=block_bt,
+        interpret=interpret)
+    return align_winners(stage, reads, read_lens, cfg=cfg, p_cap=p_cap,
+                         backend=be_name, block_bt=block_bt)
 
 
 def map_batch_index(gidx: GraphIndex, reads, read_lens, **kw

@@ -14,7 +14,9 @@ DESIGN.md §8), so they produce identical output for the same read set:
 Both compose with the workload axis (DESIGN.md §10): ``--mode linear``
 emits PAF against a linear reference, ``--mode graph`` builds a
 variation-graph index and emits GAF (node path + CIGAR) through the
-``graph_lax``/``graph_pallas`` backends.
+``graph_lax``/``graph_pallas`` backends — and with the sharding axis
+(DESIGN.md §11): ``--num-shards N`` partitions the reference index
+across N devices (`repro.shard` scatter/merge), byte-identical output.
 
 On a pod this runs one process per host with reads sharded by
 process_index.
@@ -134,6 +136,14 @@ def main(argv=None):
                          "graph; env REPRO_ALIGN_BACKEND overrides auto)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="deprecated alias for --align-backend pallas_dc")
+    ap.add_argument("--num-shards", type=int, default=1,
+                    help="shard the reference index over N devices "
+                         "(repro.shard scatter/merge; works on CPU via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+                         ", falling back to a vmapped single-device "
+                         "execution with identical output when fewer "
+                         "devices exist); PAF/GAF is byte-identical to "
+                         "--num-shards 1")
     ap.add_argument("--online", action="store_true",
                     help="open-loop Poisson arrivals instead of the "
                          "offline work-queue drain")
@@ -186,6 +196,7 @@ def main(argv=None):
         align_backend=backend,
         workload=args.mode,
         filter_k=max(8, int(args.read_len * prof.error_rate * 1.5)),
+        num_shards=args.num_shards,
         minimizer_w=8, minimizer_k=12)
 
     pi, pc = jax.process_index(), jax.process_count()

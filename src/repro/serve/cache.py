@@ -1,19 +1,31 @@
-"""LRU result cache keyed on (read-bytes digest, index epoch).
+"""LRU result cache keyed on (read-bytes digest, index-epoch token).
 
 Online mappers see heavy key reuse (duplicate reads from PCR/optical
 duplicates, resubmitted requests, popular amplicons), and a mapping is a
 pure function of (read bases, reference index) — so results are cacheable
 as long as the key pins *which* reference index produced them.  The index
-half of the key is the ``EpochedIndex`` epoch
-(`core/minimizer_index.py`): refreshing the reference bumps the epoch,
-which atomically invalidates every cached result without touching the
-cache (stale epochs simply never match and age out of the LRU).
+half of the key is an opaque hashable **epoch token**:
+
+* single-device serving passes the scalar ``EpochedIndex`` /
+  ``EpochedGraphIndex`` epoch (`core/minimizer_index.py`,
+  `graph/index.py`) — refreshing the reference bumps it, which
+  atomically invalidates every cached result without touching the cache
+  (stale epochs simply never match and age out of the LRU);
+* sharded serving (`repro.shard`) passes the ``(layout_key, epoch
+  vector)`` token from ``EpochedShardedIndex.current()``.  The vector
+  matters: shard-*local* epoch counters are not globally unique — after
+  one shard's failover re-materialization, a scalar such as
+  ``max(epochs)`` or a single shard's counter can collide with a
+  different overall shard state (or a different layout entirely) and
+  serve a result mapped against the wrong reference bytes.  Keying on
+  the full layout + vector makes any observable index change a new key.
 """
 from __future__ import annotations
 
 import hashlib
 import threading
 from collections import OrderedDict
+from typing import Hashable
 
 import numpy as np
 
@@ -36,13 +48,14 @@ class ResultCache:
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         self.capacity = capacity
-        self._d: OrderedDict[tuple[bytes, int], object] = OrderedDict()
+        self._d: OrderedDict[tuple[bytes, Hashable], object] = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def get(self, read: np.ndarray, epoch: int, *,
+    def get(self, read: np.ndarray, epoch: Hashable, *,
             digest: bytes | None = None):
+        """Cached result for (read, epoch token), or None; counts hit/miss."""
         if self.capacity == 0:  # disabled: skip the digest on the hot path
             with self._lock:
                 self.misses += 1
@@ -56,8 +69,9 @@ class ResultCache:
             self.misses += 1
             return None
 
-    def put(self, read: np.ndarray, epoch: int, value, *,
+    def put(self, read: np.ndarray, epoch: Hashable, value, *,
             digest: bytes | None = None) -> None:
+        """Insert a result under (read, epoch token), evicting LRU overflow."""
         if self.capacity == 0:
             return
         key = (digest or read_digest(read), epoch)
@@ -68,13 +82,16 @@ class ResultCache:
                 self._d.popitem(last=False)
 
     def evict_epochs_below(self, epoch: int) -> int:
-        """Eagerly drop entries from pre-``epoch`` indexes; returns #evicted.
+        """Eagerly drop entries from pre-``epoch`` scalar-epoch indexes.
 
         Optional — stale entries are unreachable either way — but frees
-        capacity immediately after a reference refresh.
+        capacity immediately after a reference refresh.  Only entries
+        whose token is a plain int are compared (sharded epoch-vector
+        tokens have no total order; they age out of the LRU instead).
         """
         with self._lock:
-            stale = [k for k in self._d if k[1] < epoch]
+            stale = [k for k in self._d
+                     if isinstance(k[1], int) and k[1] < epoch]
             for k in stale:
                 del self._d[k]
             return len(stale)
@@ -85,5 +102,6 @@ class ResultCache:
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of gets served from cache (0.0 before any get)."""
         n = self.hits + self.misses
         return self.hits / n if n else 0.0

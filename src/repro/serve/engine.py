@@ -21,12 +21,16 @@ Two wastes of the offline driver are removed here:
   `repro.align.align_batch`, so the engine serves any registered
   backend (``lax``, ``pallas_dc``, ``pallas_dc_v2``, …) unchanged.
 
-Results are memoized in an LRU keyed on ``(read digest, index epoch)``
-(`cache.py`); refreshing the reference through ``EpochedIndex`` bumps the
-epoch and invalidates the lot.  The engine is mode-agnostic: the offline
-WorkQueue path and the online Poisson path in `launch/serve_genomics.py`
-both sit on the same ``submit()``/``drain()`` surface, which is what
-makes their PAF outputs bit-identical.
+Results are memoized in an LRU keyed on ``(read digest, index epoch
+token)`` (`cache.py`) — a scalar epoch for single-device indexes, the
+``(layout, epoch vector)`` token for sharded ones; refreshing the
+reference bumps it and invalidates the lot.  The engine is
+mode-agnostic: the offline WorkQueue path and the online Poisson path
+in `launch/serve_genomics.py` both sit on the same
+``submit()``/``drain()`` surface, which is what makes their PAF outputs
+bit-identical.  With ``num_shards > 1`` the bucket executors become
+`repro.shard` scatter/merge/align pipelines (DESIGN.md §11) with
+byte-identical output.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
+from functools import partial
 from typing import NamedTuple, Sequence
 
 import jax
@@ -68,6 +73,21 @@ class EngineConfig:
     results carrying the node path for GAF).  It is part of the
     executor-cache key; linear backend names resolve to their graph
     twins under the graph workload (``lax`` → ``graph_lax``, …).
+
+    ``num_shards > 1`` serves through `repro.shard`: the engine wraps
+    the index into its epoch-vector-stamped sharded form, bucket
+    executors become scatter/merge/align pipelines (``shard_map`` over
+    a shard mesh when enough devices exist, stacked ``vmap``
+    otherwise), and the result cache keys on the (layout, epoch
+    vector) token instead of a scalar epoch.  ``shard_candidates`` is
+    each shard's per-read candidate budget (None = ``max_candidates``,
+    the identity-preserving default; throughput deployments set
+    ``max_candidates // num_shards`` to strong-scale the filter).
+    PAF/GAF output is byte-identical to ``num_shards=1`` as long as the
+    single-device winner ranks within ``shard_candidates`` by votes in
+    its owning shard — automatic for real reads at the default budget;
+    see the `repro.shard.mapper` caveat before shrinking it on highly
+    repetitive references.
     """
 
     buckets: tuple[int, ...] = (160, 320, 640, 1280)
@@ -79,6 +99,8 @@ class EngineConfig:
     filter_bits: int = 128
     filter_k: int = 12
     max_candidates: int = 4
+    num_shards: int = 1
+    shard_candidates: int | None = None  # None = max_candidates per shard
     # defaults match build_reference_index/build_epoched_index and
     # mapper.map_batch, so all-defaults construction is consistent
     minimizer_w: int = 10
@@ -96,6 +118,12 @@ class EngineConfig:
         if self.workload not in ("linear", "graph"):
             raise ValueError(f"workload must be 'linear' or 'graph', got "
                              f"{self.workload!r}")
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got "
+                             f"{self.num_shards}")
+        if self.shard_candidates is not None and self.shard_candidates < 1:
+            raise ValueError(f"shard_candidates must be >= 1, got "
+                             f"{self.shard_candidates}")
         object.__setattr__(self, "buckets", tuple(sorted(set(self.buckets))))
 
     def bucket_for(self, length: int) -> int:
@@ -136,6 +164,8 @@ class ServeEngine:
     def __init__(self, index,
                  config: EngineConfig = EngineConfig(),
                  metrics: Metrics | None = None):
+        self.config = config
+
         def check_minimizer(kw):
             if (kw["w"], kw["k"]) != (config.minimizer_w, config.minimizer_k):
                 raise ValueError(
@@ -148,11 +178,17 @@ class ServeEngine:
 
             if isinstance(index, GraphIndex):
                 index = EpochedGraphIndex(index)
-            elif not isinstance(index, EpochedGraphIndex):
+            elif not isinstance(index, EpochedGraphIndex) and not (
+                    config.num_shards > 1 and self._is_sharded_graph(index)):
                 raise TypeError(
                     f"graph workload needs a GraphIndex/EpochedGraphIndex, "
                     f"got {type(index).__name__}")
-            check_minimizer(index._build_kw)
+            if isinstance(index, EpochedGraphIndex):
+                check_minimizer(index._build_kw)
+            if config.num_shards > 1:
+                index = self._shard_graph_index(index)
+        elif config.num_shards > 1:
+            index = self._shard_linear_index(index, check_minimizer)
         elif not isinstance(index, EpochedIndex):
             # a bare ReferenceIndex carries no build params, so the engine
             # assumes it was built with config.minimizer_w/k (prefer
@@ -163,7 +199,6 @@ class ServeEngine:
         else:
             check_minimizer(index._build_kw)
         self.index = index
-        self.config = config
         # resolve "auto" once: the executor-cache key and every flush use
         # the same concrete backend for the engine's whole lifetime
         from repro import align as align_dispatch
@@ -187,6 +222,83 @@ class ServeEngine:
         self._worker = threading.Thread(
             target=self._run, name="serve-engine", daemon=True)
         self._worker.start()
+
+    # ------------------------------------------------------------ sharding --
+    def _shard_halo(self) -> int:
+        """Smallest halo covering every bucket's mapping geometry."""
+        from repro import shard
+
+        c = self.config
+        cap = max(c.buckets)
+        return max(shard.DEFAULT_HALO, shard.required_halo(
+            p_cap=cap, filter_bits=min(c.filter_bits, cap),
+            filter_k=c.filter_k, t_cap=cap + 2 * c.genasm.w))
+
+    @staticmethod
+    def _is_sharded_graph(index) -> bool:
+        from repro.shard import EpochedShardedGraphIndex, ShardedGraphIndex
+
+        return isinstance(index, (EpochedShardedGraphIndex,
+                                  ShardedGraphIndex))
+
+    def _shard_linear_index(self, index, check_minimizer):
+        """Wrap/convert a linear index for ``num_shards > 1`` serving."""
+        from repro import shard
+
+        c = self.config
+        if isinstance(index, shard.EpochedShardedIndex):
+            esi = index
+        elif isinstance(index, shard.ShardedIndex):
+            raise TypeError(
+                "sharded serving needs an EpochedShardedIndex (it carries "
+                "the host reference for failover re-materialization); got "
+                "a bare ShardedIndex — build via shard.from_epoched")
+        else:
+            if isinstance(index, EpochedIndex):
+                check_minimizer(index._build_kw)
+            index_or_epi = index if isinstance(index, EpochedIndex) else \
+                EpochedIndex(index, w=c.minimizer_w, k=c.minimizer_k)
+            esi = shard.from_epoched(index_or_epi, c.num_shards,
+                                     halo=self._shard_halo())
+        if esi.index.num_shards != c.num_shards:
+            raise ValueError(
+                f"index sharded {esi.index.num_shards} ways but config "
+                f"asks for num_shards={c.num_shards}")
+        if (esi.index.minimizer_w, esi.index.minimizer_k) != \
+                (c.minimizer_w, c.minimizer_k):
+            raise ValueError(
+                f"sharded index built with minimizer "
+                f"w={esi.index.minimizer_w}/k={esi.index.minimizer_k} but "
+                f"engine seeds with w={c.minimizer_w}/k={c.minimizer_k}")
+        return esi
+
+    def _shard_graph_index(self, index):
+        """Wrap/convert a graph index for ``num_shards > 1`` serving."""
+        from repro import shard
+        from repro.graph.index import EpochedGraphIndex
+
+        c = self.config
+        if isinstance(index, shard.EpochedShardedGraphIndex):
+            esi = index
+        elif isinstance(index, shard.ShardedGraphIndex):
+            raise TypeError(
+                "sharded graph serving needs an EpochedShardedGraphIndex "
+                "— build via shard.from_epoched_graph")
+        else:
+            assert isinstance(index, EpochedGraphIndex)
+            esi = shard.from_epoched_graph(index, c.num_shards,
+                                           halo=self._shard_halo())
+        if esi.index.num_shards != c.num_shards:
+            raise ValueError(
+                f"index sharded {esi.index.num_shards} ways but config "
+                f"asks for num_shards={c.num_shards}")
+        if (esi.index.minimizer_w, esi.index.minimizer_k) != \
+                (c.minimizer_w, c.minimizer_k):
+            raise ValueError(
+                f"sharded graph index built with minimizer "
+                f"w={esi.index.minimizer_w}/k={esi.index.minimizer_k} but "
+                f"engine seeds with w={c.minimizer_w}/k={c.minimizer_k}")
+        return esi
 
     # ----------------------------------------------------------- client API --
     def submit(self, read: np.ndarray) -> Future:
@@ -268,20 +380,29 @@ class ServeEngine:
         self.close()
 
     # ----------------------------------------------------- executor cache ----
-    def _executor_key(self, cap: int, stride: int | None = None) -> tuple:
+    def _executor_key(self, cap: int, geom=None) -> tuple:
         c = self.config
         return (cap, c.workload, self.align_backend, c.genasm,
                 min(c.filter_bits, cap), c.filter_k, c.max_candidates,
-                c.minimizer_w, c.minimizer_k, c.max_batch, stride)
+                c.num_shards, c.shard_candidates,
+                c.minimizer_w, c.minimizer_k, c.max_batch, geom)
 
-    def _executor(self, cap: int, stride: int | None = None):
-        """One jitted ``map_batch`` per (bucket_cap, workload, backend,
-        config) — built lazily.  ``stride`` is the graph index's
-        tile_stride *at flush time*: it is baked into the jitted closure,
-        so it rides in the key — a refresh() that re-tiles the graph at a
-        new pitch gets a fresh executor instead of silently mis-gathering
-        through a stale one."""
-        key = self._executor_key(cap, stride)
+    def _count_trace(self, cap: int) -> None:
+        """Executor-body hook: runs at trace time only → counts retraces."""
+        self.trace_counts[cap] = self.trace_counts.get(cap, 0) + 1
+
+    def _executor(self, cap: int, geom=None, sharded_index=None):
+        """One compiled ``map_batch`` per (bucket_cap, workload, backend,
+        config) — built lazily.  ``geom`` is the index geometry *at
+        flush time* — the graph index's tile_stride, or a sharded
+        index's ``layout_key`` — baked into the compiled closure, so it
+        rides in the key: a refresh() that re-tiles the graph (or
+        re-partitions the shards) gets a fresh executor instead of
+        silently mis-gathering through a stale one.  ``sharded_index``
+        is the *same snapshot* ``_execute`` took from ``current()`` —
+        re-reading ``self.index`` here would race a concurrent
+        ``refresh()`` and bake the new geometry under the old key."""
+        key = self._executor_key(cap, geom)
         fn = self._executors.get(key)
         if fn is None:
             c = self.config
@@ -297,21 +418,39 @@ class ServeEngine:
                     align_dispatch.autotune(backend, cap, c.genasm.k,
                                             batch=c.max_batch, cfg=c.genasm)
 
-            if c.workload == "graph":
+            n_cand = c.shard_candidates or c.max_candidates
+            if c.num_shards > 1 and c.workload == "graph":
+                from repro.shard import ShardedGraphMapExecutor
+
+                fn = ShardedGraphMapExecutor(
+                    sharded_index, cfg=c.genasm, p_cap=cap,
+                    filter_bits=fbits, filter_k=c.filter_k,
+                    shard_candidates=n_cand, backend=backend,
+                    trace_hook=partial(self._count_trace, cap))
+            elif c.num_shards > 1:
+                from repro.shard import ShardedMapExecutor
+
+                fn = ShardedMapExecutor(
+                    sharded_index, cfg=c.genasm, p_cap=cap,
+                    filter_bits=fbits, filter_k=c.filter_k,
+                    shard_candidates=n_cand, backend=backend,
+                    trace_hook=partial(self._count_trace, cap))
+            elif c.workload == "graph":
                 from repro.graph import mapper as graph_mapper
 
                 def run(arrays, arr, lens, _cap=cap):
-                    # body executes at trace time only → counts retraces
-                    self.trace_counts[_cap] = self.trace_counts.get(_cap, 0) + 1
+                    self._count_trace(_cap)
                     return graph_mapper.map_batch(
-                        arrays, arr, lens, tile_stride=stride, cfg=c.genasm,
+                        arrays, arr, lens, tile_stride=geom, cfg=c.genasm,
                         p_cap=_cap, filter_bits=fbits, filter_k=c.filter_k,
                         max_candidates=c.max_candidates,
                         minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
                         backend=backend)
+
+                fn = jax.jit(run)
             else:
                 def run(index, arr, lens, _cap=cap):
-                    self.trace_counts[_cap] = self.trace_counts.get(_cap, 0) + 1
+                    self._count_trace(_cap)
                     return mapper.map_batch(
                         index, arr, lens, cfg=c.genasm, p_cap=_cap,
                         filter_bits=fbits, filter_k=c.filter_k,
@@ -319,12 +458,13 @@ class ServeEngine:
                         minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
                         backend=backend)
 
-            fn = jax.jit(run)
+                fn = jax.jit(run)
             self._executors[key] = fn
         return fn
 
     @property
     def n_executors(self) -> int:
+        """Number of compiled bucket executors currently cached."""
         return len(self._executors)
 
     # ------------------------------------------------------------- worker ----
@@ -396,7 +536,10 @@ class ServeEngine:
     def _execute(self, cap: int, reqs: list[_Request]) -> None:
         c = self.config
         index, epoch = self.index.current()
-        if c.workload == "graph":
+        if c.num_shards > 1:
+            payload = index.arrays
+            fn = self._executor(cap, index.layout_key, sharded_index=index)
+        elif c.workload == "graph":
             payload = index.arrays
             fn = self._executor(cap, index.tile_stride)
         else:

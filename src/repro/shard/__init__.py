@@ -1,0 +1,33 @@
+"""repro.shard — multi-device reference sharding with scatter/merge.
+
+DESIGN.md §11: the reference (linear or variation graph) is cut into
+per-device shards with overlap halos (`partition` / `graph_partition`),
+reads scatter to every shard for independent seeding + GenASM-DC
+filtering under ``shard_map`` (`mapper` / `graph_mapper`), per-shard
+winners merge by a global-coordinate lexicographic rule, and one
+batched ``align_batch`` call finishes the winners.  `failover` routes
+the scatter stage through `repro.dist.fault.WorkQueue` leases so a lost
+shard re-queues instead of dropping reads.  Output is byte-identical to
+the single-device mappers at any shard count.
+"""
+from .failover import map_batch_with_failover
+from .graph_mapper import (ShardedGraphMapExecutor, get_graph_executor,
+                           map_batch_sharded_graph)
+from .graph_partition import (EpochedShardedGraphIndex, GraphShardArrays,
+                              ShardedGraphIndex, from_epoched_graph,
+                              shard_graph_index)
+from .mapper import (ShardedMapExecutor, get_executor, map_batch_sharded,
+                     required_halo, validate_geometry)
+from .partition import (DEFAULT_HALO, EpochedShardedIndex, ShardArrays,
+                        ShardLayout, ShardedIndex, build_sharded_index,
+                        from_epoched, plan_layout)
+
+__all__ = [
+    "DEFAULT_HALO", "EpochedShardedGraphIndex", "EpochedShardedIndex",
+    "GraphShardArrays", "ShardArrays", "ShardLayout", "ShardedGraphIndex",
+    "ShardedGraphMapExecutor", "ShardedIndex", "ShardedMapExecutor",
+    "build_sharded_index", "from_epoched", "from_epoched_graph",
+    "get_executor", "get_graph_executor", "map_batch_sharded",
+    "map_batch_sharded_graph", "map_batch_with_failover", "plan_layout",
+    "required_halo", "shard_graph_index", "validate_geometry",
+]

@@ -1,0 +1,108 @@
+"""Shard failover: lease-routed scatter so a lost shard re-queues.
+
+The serve path normally launches the scatter stage as one program over
+all shards; this module is the degraded-mode driver for when shards can
+*fail independently* (a device drops, a host OOMs).  Each shard's stage
+runs as its own single-shard program routed through the PR-1
+`repro.dist.fault.WorkQueue` lease protocol:
+
+* every shard id is a work item; a claim leases it for ``lease_s``;
+* a shard whose stage raises (or whose worker dies and lets the lease
+  expire) is **re-queued, not dropped** — the handler re-materializes
+  the shard from the epoched index (``refresh_shard``, which bumps that
+  shard's epoch-vector entry) and the next claim retries it;
+* reads are only answered after *every* shard contributed its
+  candidates, so no read silently loses the shard that owned its true
+  mapping locus.
+
+``fault_hook(shard_id, attempt)`` exists for tests and chaos drills: it
+runs before each shard stage and may raise to simulate a lost device.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.genasm import GenASMConfig
+from repro.core.mapper import MapResult
+from repro.dist.fault import WorkQueue
+
+from .mapper import ShardStageResult, get_executor
+from .partition import EpochedShardedIndex, ShardArrays
+
+
+def _row(arrays: ShardArrays, i: int) -> ShardArrays:
+    """A one-shard [1, ...] view of row ``i`` of the stacked arrays."""
+    return ShardArrays(*[a[i: i + 1] for a in arrays])
+
+
+def map_batch_with_failover(
+    esi: EpochedShardedIndex,
+    reads,
+    read_lens,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    shard_candidates: int = 4,
+    backend: str | None = None,
+    lease_s: float = 60.0,
+    max_attempts: int = 3,
+    fault_hook=None,
+) -> MapResult:
+    """Map a batch with per-shard retry semantics over a lease queue.
+
+    Produces the same :class:`repro.core.mapper.MapResult` as
+    `shard.mapper.map_batch_sharded` (numpy leaves) — shard stages are
+    deterministic, so a re-materialized shard contributes identical
+    candidates and the merged output is unchanged by failures.  Raises
+    ``RuntimeError`` only after a shard fails ``max_attempts`` times.
+    """
+    sharded, _ = esi.current()
+    s = sharded.num_shards
+    # shared keyed cache (mapper.get_executor): repeated degraded-mode
+    # batches reuse the compiled stage/align programs instead of
+    # retracing per call
+    ex = get_executor(
+        sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
+        filter_k=filter_k, shard_candidates=shard_candidates,
+        backend=backend, force_vmap=True)
+
+    q = WorkQueue(s, lease_s=lease_s)
+    attempts = [0] * s
+    parts: dict[int, tuple] = {}
+    while not q.finished:
+        item = q.claim()
+        if item is None:
+            time.sleep(0.001)
+            continue
+        attempts[item] += 1
+        try:
+            if fault_hook is not None:
+                fault_hook(item, attempts[item])
+            cur, _ = esi.current()
+            st = ex.stage(_row(cur.arrays, item), reads, read_lens)
+            parts[item] = jax.tree_util.tree_map(
+                lambda x: np.asarray(x)[0], st)
+        except Exception as e:
+            if attempts[item] >= max_attempts:
+                raise RuntimeError(
+                    f"shard {item} failed {attempts[item]} times; last "
+                    f"error: {e}") from e
+            esi.refresh_shard(item)  # re-materialize before the retry
+            q.fail(item)
+            continue
+        q.complete(item)
+
+    stacked = ShardStageResult(*[
+        jnp.asarray(np.stack([parts[i][f] for i in range(s)]))
+        for f in range(len(ShardStageResult._fields))])
+    fd, pos, text, t_len, _ = ex.merge(stacked)
+    res = ex._align(jnp.asarray(text), jnp.asarray(reads),
+                    jnp.asarray(read_lens, jnp.int32), jnp.asarray(t_len),
+                    jnp.asarray(pos), jnp.asarray(fd))
+    return jax.tree_util.tree_map(np.asarray, res)

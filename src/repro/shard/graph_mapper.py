@@ -1,0 +1,233 @@
+"""Shard-parallel graph mapping: the GAF twin of `shard.mapper`.
+
+Same three-beat pipeline as the linear sharded mapper — scatter the
+read batch to every graph shard, merge per-shard winners on the host,
+one batched graph ``align_batch`` call — with the per-shard stage being
+`repro.graph.mapper.graph_candidate_stage` over that shard's
+:class:`~repro.graph.mapper.GraphView` (local tile/backbone slices,
+global ids).  The winner rule is the lexicographic
+``min (filter distance, origin node, tile)`` in global coordinates, the
+same rule the whole-graph mapper applies across its candidate axis, so
+GAF output is byte-identical at 1 and N shards.  Winners travel with
+their packed window bytes *and* per-node backbone coordinates
+(``bwin``), so the align stage needs no graph arrays at all.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.genasm import GenASMConfig
+from repro.core.mapper import POS_SENTINEL
+from repro.dist import sharding as dist_sharding
+from repro.graph.mapper import (CandidateStageResult, GraphMapResult,
+                                GraphView, align_winners,
+                                graph_backend_name, graph_candidate_stage)
+
+from .graph_partition import GraphShardArrays, ShardedGraphIndex
+
+
+def validate_graph_geometry(sharded: ShardedGraphIndex, *, p_cap: int,
+                            filter_k: int, cfg: GenASMConfig) -> None:
+    """Raise if the tile/halo geometry cannot cover this mapping setup."""
+    from repro.core.segram.graph import HOP_LIMIT
+
+    t_cap = p_cap + 2 * cfg.w
+    span = sharded.tile_len - t_cap
+    if span < sharded.tile_stride:
+        raise ValueError(
+            f"tile_len {sharded.tile_len} leaves a {span}-node anchor "
+            f"search span < tile_stride {sharded.tile_stride} at p_cap "
+            f"{p_cap}; rebuild the index with window >= {t_cap}")
+    need = p_cap + 32 + HOP_LIMIT + filter_k
+    if sharded.layout.halo < need:
+        raise ValueError(
+            f"graph shard halo {sharded.layout.halo} < {need} required "
+            f"for p_cap={p_cap}, filter_k={filter_k}; rebuild with "
+            f"halo >= {need}")
+
+
+def _stage_one_shard(tiles, tvalid, tbase, nob, nboff, bb, nbase, hashes,
+                     poss, reads, lens, *, static):
+    """One graph shard's candidate stage over the whole read batch."""
+    view = GraphView(
+        tile_gtext=tiles, tile_valid=tvalid, tile_base=tbase,
+        node_of_backbone=nob, nb_offset=nboff, backbone=bb,
+        node_base=nbase, idx_hashes=hashes, idx_positions=poss)
+    return graph_candidate_stage(view, reads, lens, **static)
+
+
+class ShardedGraphMapExecutor:
+    """Compiled scatter/merge/align pipeline for one sharded graph index.
+
+    Mirrors `shard.mapper.ShardedMapExecutor`: a ``shard_map`` (or
+    stacked ``vmap``) candidate stage, a host lexicographic merge, and
+    one jitted graph-align stage producing
+    :class:`repro.graph.mapper.GraphMapResult`.
+    """
+
+    def __init__(self, sharded: ShardedGraphIndex, *,
+                 cfg: GenASMConfig = GenASMConfig(),
+                 p_cap: int = 256,
+                 filter_bits: int = 128,
+                 filter_k: int = 12,
+                 shard_candidates: int = 4,
+                 backend: str | None = None,
+                 block_bt: int | None = None,
+                 force_vmap: bool = False,
+                 trace_hook=None):
+        validate_graph_geometry(sharded, p_cap=p_cap, filter_k=filter_k,
+                                cfg=cfg)
+        self.num_shards = sharded.num_shards
+        self.backend = graph_backend_name(backend)
+        t_cap = p_cap + 2 * cfg.w
+        static = dict(
+            tile_stride=sharded.tile_stride, n_tiles=sharded.n_tiles,
+            backbone_len=sharded.ref_len, n_nodes=sharded.n_nodes,
+            t_cap=t_cap, filter_bits=min(filter_bits, p_cap),
+            filter_k=filter_k, max_candidates=shard_candidates,
+            minimizer_w=sharded.minimizer_w,
+            minimizer_k=sharded.minimizer_k,
+            use_kernel=False, block_bt=block_bt, interpret=True)
+        stage = partial(_stage_one_shard, static=static)
+
+        mesh = None if force_vmap else dist_sharding.shard_mesh(
+            self.num_shards)
+        self.spmd = mesh is not None
+        if self.spmd:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            arr_specs = tuple(dist_sharding.stacked_specs(
+                sharded.arrays, mesh))
+
+            def block_stage(*args):
+                arrs, (reads, lens) = args[:-2], args[-2:]
+                out = stage(*[a[0] for a in arrs], reads, lens)
+                return jax.tree.map(lambda x: x[None], out)
+
+            self._stage = jax.jit(shard_map(
+                block_stage, mesh=mesh,
+                in_specs=arr_specs + (P(), P()),
+                out_specs=P("shard")))
+        else:
+            def stacked_stage(*args):
+                arrs, (reads, lens) = args[:-2], args[-2:]
+                return jax.vmap(
+                    lambda *rows: stage(*rows, reads, lens))(*arrs)
+
+            self._stage = jax.jit(stacked_stage)
+
+        def align_stage(merged: CandidateStageResult, reads, lens):
+            if trace_hook is not None:
+                trace_hook()
+            return align_winners(merged, reads, lens, cfg=cfg, p_cap=p_cap,
+                                 backend=self.backend, block_bt=block_bt)
+
+        self._align = jax.jit(align_stage)
+
+    def stage(self, arrays: GraphShardArrays, reads, read_lens
+              ) -> CandidateStageResult:
+        """Run the scatter stage: ``[S, B, ...]`` per-shard winners."""
+        return self._stage(*arrays, jnp.asarray(reads),
+                           jnp.asarray(read_lens, jnp.int32))
+
+    @staticmethod
+    def merge(st: CandidateStageResult) -> CandidateStageResult:
+        """Host merge: lexicographic ``(distance, origin, tile)`` per read.
+
+        Identical windows duplicated across neighbouring shards'
+        overlap regions collapse because their full sort key (and the
+        window bytes behind it) are equal.
+        """
+        d = np.asarray(st.distance)
+        origin = np.asarray(st.origin)
+        tile = np.asarray(st.tile)
+        dm = d.min(axis=0, keepdims=True)
+        om = np.where(d == dm, origin, POS_SENTINEL)
+        omin = om.min(axis=0, keepdims=True)
+        tm = np.where(om == omin, tile, POS_SENTINEL)
+        win = tm.argmin(axis=0)
+        cols = np.arange(d.shape[1])
+        pick = lambda a: np.asarray(a)[win, cols]  # noqa: E731
+        return CandidateStageResult(
+            distance=pick(st.distance), origin=pick(st.origin),
+            tile=pick(st.tile), gwin=pick(st.gwin), bwin=pick(st.bwin),
+            t_len=pick(st.t_len), prefilter_ok=pick(st.prefilter_ok))
+
+    def __call__(self, arrays: GraphShardArrays, reads, read_lens
+                 ) -> GraphMapResult:
+        """Map one batch: scatter → merge → single graph align call."""
+        st = self.stage(arrays, reads, read_lens)
+        merged = self.merge(st)
+        res = self._align(
+            jax.tree.map(jnp.asarray, merged), jnp.asarray(reads),
+            jnp.asarray(read_lens, jnp.int32))
+        return jax.tree_util.tree_map(np.asarray, res)
+
+
+# bounded LRU, mirroring shard.mapper: refresh() cycles must not leak
+# compiled executors
+_EXECUTORS: OrderedDict[tuple, ShardedGraphMapExecutor] = OrderedDict()
+_EXECUTOR_CACHE_CAP = 8
+
+
+def get_graph_executor(
+    sharded: ShardedGraphIndex,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    shard_candidates: int = 4,
+    backend: str | None = None,
+    block_bt: int | None = None,
+    force_vmap: bool = False,
+) -> ShardedGraphMapExecutor:
+    """Cached :class:`ShardedGraphMapExecutor` per (geometry, params)."""
+    key = (sharded.layout_key, cfg, p_cap, filter_bits, filter_k,
+           shard_candidates, backend, block_bt, force_vmap)
+    ex = _EXECUTORS.get(key)
+    if ex is None:
+        ex = ShardedGraphMapExecutor(
+            sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
+            filter_k=filter_k, shard_candidates=shard_candidates,
+            backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+        _EXECUTORS[key] = ex
+        while len(_EXECUTORS) > _EXECUTOR_CACHE_CAP:
+            _EXECUTORS.popitem(last=False)
+    else:
+        _EXECUTORS.move_to_end(key)
+    return ex
+
+
+def map_batch_sharded_graph(
+    sharded: ShardedGraphIndex,
+    reads,
+    read_lens,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    shard_candidates: int = 4,
+    backend: str | None = None,
+    block_bt: int | None = None,
+    force_vmap: bool = False,
+) -> GraphMapResult:
+    """Map a read batch against a sharded variation-graph index.
+
+    Returns the same :class:`repro.graph.mapper.GraphMapResult` (numpy
+    leaves) as the single-device `graph.mapper.map_batch` —
+    byte-identical positions, CIGARs, and GAF node paths for any shard
+    count.  Executors are cached per (geometry, parameters).
+    """
+    ex = get_graph_executor(
+        sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
+        filter_k=filter_k, shard_candidates=shard_candidates,
+        backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+    return ex(sharded.arrays, reads, read_lens)

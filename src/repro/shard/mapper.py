@@ -1,0 +1,302 @@
+"""Shard-parallel linear mapping: scatter reads, merge candidates, align.
+
+Execution plan per flush (the dissertation's channel dataflow, DESIGN.md
+§11):
+
+1. **Scatter** — the read batch is broadcast to every shard; each shard
+   seeds against its own minimizer-table slice and GenASM-DC-filters its
+   own ``shard_candidates`` best diagonals, entirely inside its haloed
+   reference slice.  This stage runs under ``shard_map`` over a
+   ``("shard",)`` mesh (specs from `repro.dist.sharding.stacked_specs`)
+   when enough devices exist, else under a ``vmap`` over the stacked
+   shard axis — the two lower to the same math, so results are
+   bit-identical.
+2. **Merge** — per-shard winners carry *global* (filter distance,
+   refined position) pairs plus their ``[t_cap]`` alignment window
+   bytes; the host picks the lexicographic minimum per read.  Windows
+   in overlap halos are byte-identical across neighbouring shards, so
+   duplicated boundary candidates dedup by construction.
+3. **Align** — one batched `repro.align.align_batch` call on the
+   winning windows (any registered backend); no stage after the merge
+   touches the sharded reference.
+
+The per-shard stage calls `repro.core.mapper.seed_filter_read` — the
+*same* function the single-device mapper runs with offset 0 — which is
+what makes ``num_shards=1`` vs ``N`` PAF output byte-identical.
+
+Identity caveat: per-shard seeding keeps each shard's top
+``shard_candidates`` diagonals *by local vote count*, so the merged
+candidate set is guaranteed to contain the single-device winner only
+while that winner ranks within ``shard_candidates`` in its owning
+shard's table.  Real reads satisfy this easily (the true diagonal
+dominates local voting, even split across a cut — pinned by the golden
+and boundary suites); a highly repetitive reference combined with a
+reduced per-shard budget (``shard_candidates < max_candidates``, the
+throughput configuration) can in principle evict it.  Serve with the
+full per-shard budget when byte-stability across re-sharding is a hard
+requirement.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapper as core_mapper
+from repro.core.genasm import GenASMConfig
+from repro.core.mapper import MapResult, POS_SENTINEL
+from repro.dist import sharding as dist_sharding
+
+from .partition import ShardArrays, ShardedIndex
+
+
+class ShardStageResult(NamedTuple):
+    """Per-(shard, read) winner of the scatter stage, global coordinates."""
+
+    distance: jnp.ndarray  # [S, B] int32 filter distance (filter_k+1 = none)
+    position: jnp.ndarray  # [S, B] int32 refined global start (sentinel=none)
+    text: jnp.ndarray  # [S, B, t_cap] int8 alignment window at position
+    t_len: jnp.ndarray  # [S, B] int32 valid window length
+
+
+def required_halo(*, p_cap: int, filter_bits: int, filter_k: int,
+                  t_cap: int) -> int:
+    """Smallest overlap halo that loses no boundary mapping.
+
+    Left of a core: a candidate diagonal seeded by an entry at the core
+    boundary can start up to ``p_cap`` bases earlier (read-relative
+    seed offset) plus 32 bases of diagonal-bucket rounding, and the
+    filter reads ``margin = filter_k + 32`` bases of drift before it.
+    Right of a core: the filter region extends ``filter_bits + margin``
+    past the candidate and the refined anchor needs ``t_cap`` bases of
+    alignment text after it.
+    """
+    margin = filter_k + 32
+    left = p_cap + 32 + margin
+    right = filter_bits + 2 * margin + t_cap
+    return max(left, right)
+
+
+def validate_geometry(sharded: ShardedIndex, *, p_cap: int, filter_bits: int,
+                      filter_k: int, t_cap: int) -> None:
+    """Raise if the layout's halo cannot cover this mapping geometry."""
+    need = required_halo(p_cap=p_cap, filter_bits=filter_bits,
+                         filter_k=filter_k, t_cap=t_cap)
+    if sharded.layout.halo < need:
+        raise ValueError(
+            f"shard halo {sharded.layout.halo} < {need} required for "
+            f"p_cap={p_cap}, filter_bits={filter_bits}, "
+            f"filter_k={filter_k}, t_cap={t_cap}; rebuild the sharded "
+            f"index with halo >= {need}")
+
+
+def _stage_one_shard(ref_row, off_row, hash_row, pos_row, reads, read_lens,
+                     *, ref_len, p_cap, t_cap, filter_bits, filter_k,
+                     shard_candidates, minimizer_w, minimizer_k):
+    """Seed + filter the whole read batch against one shard's slice."""
+    f = partial(
+        core_mapper.seed_filter_read, ref_row, off_row, ref_len,
+        hash_row, pos_row, p_cap=p_cap, t_cap=t_cap,
+        filter_bits=filter_bits, filter_k=filter_k,
+        max_candidates=shard_candidates, minimizer_w=minimizer_w,
+        minimizer_k=minimizer_k)
+    sf = jax.vmap(f)(reads, read_lens)
+    return sf.distance, sf.position, sf.text, sf.t_len
+
+
+class ShardedMapExecutor:
+    """Compiled scatter/merge/align pipeline for one sharded geometry.
+
+    Holds two jitted programs — the shard stage (``shard_map`` over a
+    shard mesh when ``jax.device_count() >= num_shards``, else a
+    stacked ``vmap``) and the align stage — plus the host merge between
+    them.  Construct once per (index geometry, mapping parameters) and
+    call with ``(ShardArrays, reads, lens)``; the serve engine caches
+    executors exactly like its single-device ones.
+    """
+
+    def __init__(self, sharded: ShardedIndex, *,
+                 cfg: GenASMConfig = GenASMConfig(),
+                 p_cap: int = 256,
+                 filter_bits: int = 128,
+                 filter_k: int = 12,
+                 shard_candidates: int = 4,
+                 minimizer_w: int | None = None,
+                 minimizer_k: int | None = None,
+                 backend: str | None = None,
+                 block_bt: int | None = None,
+                 force_vmap: bool = False,
+                 trace_hook=None):
+        t_cap = p_cap + 2 * cfg.w
+        filter_bits = min(filter_bits, p_cap)
+        validate_geometry(sharded, p_cap=p_cap, filter_bits=filter_bits,
+                          filter_k=filter_k, t_cap=t_cap)
+        self.num_shards = sharded.num_shards
+        self.filter_k = filter_k
+        self.backend = backend
+        stage = partial(
+            _stage_one_shard,
+            ref_len=sharded.ref_len, p_cap=p_cap, t_cap=t_cap,
+            filter_bits=filter_bits, filter_k=filter_k,
+            shard_candidates=shard_candidates,
+            minimizer_w=sharded.minimizer_w if minimizer_w is None
+            else minimizer_w,
+            minimizer_k=sharded.minimizer_k if minimizer_k is None
+            else minimizer_k)
+
+        mesh = None if force_vmap else dist_sharding.shard_mesh(
+            self.num_shards)
+        self.spmd = mesh is not None
+        if self.spmd:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            arr_specs = tuple(dist_sharding.stacked_specs(
+                sharded.arrays, mesh))
+
+            def block_stage(refs, offs, hashes, poss, reads, lens):
+                out = stage(refs[0], offs[0], hashes[0], poss[0], reads, lens)
+                return jax.tree.map(lambda x: x[None], out)
+
+            self._stage = jax.jit(shard_map(
+                block_stage, mesh=mesh,
+                in_specs=arr_specs + (P(), P()),
+                out_specs=P("shard")))
+        else:
+            def stacked_stage(refs, offs, hashes, poss, reads, lens):
+                return jax.vmap(
+                    lambda r, o, h, p: stage(r, o, h, p, reads, lens)
+                )(refs, offs, hashes, poss)
+
+            self._stage = jax.jit(stacked_stage)
+
+        def align_stage(text, reads, lens, t_len, pos, fd):
+            if trace_hook is not None:
+                trace_hook()
+            from repro import align as align_dispatch
+
+            lens = lens.astype(jnp.int32)
+            pat = jnp.where(jnp.arange(p_cap)[None, :] < lens[:, None],
+                            reads[:, :p_cap], core_mapper.WILDCARD
+                            ).astype(jnp.int8)
+            res = align_dispatch.align_batch(
+                text, pat, lens, t_len, cfg=cfg, backend=backend,
+                p_cap=p_cap, block_bt=block_bt)
+            failed = res.failed | (fd > filter_k)
+            return MapResult(
+                position=jnp.where(failed, -1, pos).astype(jnp.int32),
+                distance=jnp.where(failed, -1, res.distance),
+                ops=res.ops, n_ops=res.n_ops, failed=failed)
+
+        self._align = jax.jit(align_stage)
+
+    def stage(self, arrays: ShardArrays, reads, read_lens
+              ) -> ShardStageResult:
+        """Run the scatter stage: per-shard winners for the whole batch."""
+        fd, pos, text, t_len = self._stage(
+            arrays.refs, arrays.offsets, arrays.hashes, arrays.positions,
+            jnp.asarray(reads), jnp.asarray(read_lens, jnp.int32))
+        return ShardStageResult(distance=fd, position=pos, text=text,
+                                t_len=t_len)
+
+    @staticmethod
+    def merge(stage: ShardStageResult):
+        """Host merge: lexicographic-min ``(distance, position)`` per read.
+
+        Overlap-halo duplicates carry identical (distance, position,
+        window bytes) in both neighbouring shards, so whichever copy
+        argmin lands on yields the same alignment — dedup for free.
+        Returns ``(fd, pos, text, t_len, winner_shard)`` numpy arrays.
+        """
+        fd = np.asarray(stage.distance)
+        pos = np.asarray(stage.position)
+        m = fd.min(axis=0)
+        pm = np.where(fd == m[None, :], pos, POS_SENTINEL)
+        win = pm.argmin(axis=0)
+        cols = np.arange(fd.shape[1])
+        return (m, pm[win, cols], np.asarray(stage.text)[win, cols],
+                np.asarray(stage.t_len)[win, cols], win)
+
+    def __call__(self, arrays: ShardArrays, reads, read_lens) -> MapResult:
+        """Map one batch: scatter → merge → single batched align call."""
+        st = self.stage(arrays, reads, read_lens)
+        fd, pos, text, t_len, _ = self.merge(st)
+        res = self._align(jnp.asarray(text), jnp.asarray(reads),
+                          jnp.asarray(read_lens, jnp.int32),
+                          jnp.asarray(t_len), jnp.asarray(pos),
+                          jnp.asarray(fd))
+        return jax.tree_util.tree_map(np.asarray, res)
+
+
+# bounded LRU: a long-running process whose refresh() cycles through
+# reference lengths must not accumulate compiled executors forever
+_EXECUTORS: OrderedDict[tuple, ShardedMapExecutor] = OrderedDict()
+_EXECUTOR_CACHE_CAP = 8
+
+
+def get_executor(
+    sharded: ShardedIndex,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    shard_candidates: int = 4,
+    backend: str | None = None,
+    block_bt: int | None = None,
+    force_vmap: bool = False,
+) -> ShardedMapExecutor:
+    """Cached :class:`ShardedMapExecutor` for one (geometry, params) key.
+
+    Shared by `map_batch_sharded` and `failover.map_batch_with_failover`
+    so repeated batches (including degraded-mode retries) never
+    recompile; the LRU bound evicts executors of abandoned layouts.
+    """
+    key = (sharded.layout_key, sharded.minimizer_w, sharded.minimizer_k,
+           cfg, p_cap, filter_bits, filter_k, shard_candidates,
+           backend, block_bt, force_vmap)
+    ex = _EXECUTORS.get(key)
+    if ex is None:
+        ex = ShardedMapExecutor(
+            sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
+            filter_k=filter_k, shard_candidates=shard_candidates,
+            backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+        _EXECUTORS[key] = ex
+        while len(_EXECUTORS) > _EXECUTOR_CACHE_CAP:
+            _EXECUTORS.popitem(last=False)
+    else:
+        _EXECUTORS.move_to_end(key)
+    return ex
+
+
+def map_batch_sharded(
+    sharded: ShardedIndex,
+    reads,
+    read_lens,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    shard_candidates: int = 4,
+    backend: str | None = None,
+    block_bt: int | None = None,
+    force_vmap: bool = False,
+) -> MapResult:
+    """Map a read batch against a sharded reference index.
+
+    ``reads`` is ``[B, >=p_cap] int8`` with ``read_lens [B]`` valid
+    lengths; returns the same :class:`repro.core.mapper.MapResult`
+    (numpy leaves) as the single-device `core.mapper.map_batch` —
+    byte-identical positions, distances, and CIGARs for any shard
+    count.  Executors are cached per (geometry, parameters).
+    """
+    ex = get_executor(
+        sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
+        filter_k=filter_k, shard_candidates=shard_candidates,
+        backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+    return ex(sharded.arrays, reads, read_lens)

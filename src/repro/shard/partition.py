@@ -1,0 +1,335 @@
+"""Reference partitioning: per-device shards with overlap halos.
+
+The dissertation scales GenASM/SeGraM by giving every accelerator
+channel a contiguous slice of the reference plus the index entries that
+land in it (GenASM §4, SeGraM §6.5); each channel seeds and filters
+independently and a cheap merge picks the global winner.  This module is
+that layout for JAX devices:
+
+* ``ShardLayout`` cuts ``[0, ref_len)`` into ``num_shards`` contiguous
+  *core* ranges.  Shard ``i`` materializes the haloed slice
+  ``[lo_i - halo, hi_i + halo)`` so every filter region and alignment
+  window anchored in its core exists fully inside the slice — no
+  mapping is lost at a shard boundary, and windows that straddle a cut
+  appear (byte-identically) in both neighbours, to be deduped at merge.
+* The minimizer table is built (or reused) **globally** — frequency
+  filtering sees global counts, exactly like the paper's offline
+  pre-processing — then partitioned by position: shard ``i`` owns the
+  entries with ``lo_i <= pos < hi_i``.  Positions stay in *global*
+  coordinates, so per-shard candidates merge without translation.
+* Everything is stacked along a leading ``[num_shards, ...]`` axis and
+  padded to common shapes, the convention `repro.dist.sharding.
+  stacked_specs` resolves to a ``P("shard")`` placement for
+  ``shard_map`` execution.
+
+``EpochedShardedIndex`` / ``EpochedShardedGraphIndex`` mirror the
+single-device epoch handles, but the epoch is a **vector** (one counter
+per shard) and ``current()`` returns a hashable *epoch token* combining
+the layout and the vector — `serve/cache.py` keys results on it, so a
+single-shard refresh (failover re-materialization) can never alias a
+cache entry from a different shard state.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitvector import SENTINEL
+from repro.core.minimizer_index import EpochedIndex, ReferenceIndex
+from repro.core.segram.minimizer import build_index
+
+DEFAULT_HALO = 1024
+_PAD_HASH = np.uint32(0xFFFFFFFF)  # sorts last; no valid seed hashes it
+_PAD_POS = np.int32(2 ** 30)
+
+
+class ShardLayout(NamedTuple):
+    """Contiguous core partition of ``[0, ref_len)`` plus the halo width.
+
+    ``bounds`` has ``num_shards + 1`` entries; shard ``i`` owns core
+    ``[bounds[i], bounds[i+1])`` and materializes the slice
+    ``[max(0, bounds[i] - halo), min(ref_len, bounds[i+1] + halo))``.
+    """
+
+    bounds: tuple[int, ...]
+    halo: int
+    ref_len: int
+
+    @property
+    def num_shards(self) -> int:
+        """Number of shards in the layout."""
+        return len(self.bounds) - 1
+
+    def core(self, i: int) -> tuple[int, int]:
+        """Global ``[lo, hi)`` core range owned by shard ``i``."""
+        return self.bounds[i], self.bounds[i + 1]
+
+    def slice_range(self, i: int) -> tuple[int, int]:
+        """Global ``[lo, hi)`` range of shard ``i``'s haloed slice."""
+        lo, hi = self.core(i)
+        return max(0, lo - self.halo), min(self.ref_len, hi + self.halo)
+
+    def shard_of(self, pos: int) -> int:
+        """Index of the shard whose core contains global position ``pos``."""
+        return int(np.searchsorted(np.asarray(self.bounds), pos,
+                                   side="right") - 1)
+
+
+def plan_layout(ref_len: int, num_shards: int,
+                halo: int = DEFAULT_HALO) -> ShardLayout:
+    """Equal-size contiguous core partition of a ``ref_len``-bp reference."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if halo < 0:
+        raise ValueError(f"halo must be >= 0, got {halo}")
+    bounds = tuple(round(i * ref_len / num_shards)
+                   for i in range(num_shards + 1))
+    if len(set(bounds)) != num_shards + 1:
+        raise ValueError(
+            f"reference of {ref_len} bp is too short for {num_shards} "
+            f"shards (empty core range)")
+    return ShardLayout(bounds=bounds, halo=halo, ref_len=ref_len)
+
+
+class ShardArrays(NamedTuple):
+    """Device half of a sharded linear index, stacked ``[S, ...]``.
+
+    Row ``i`` is shard ``i``; rows are padded to common shapes (refs
+    with sentinel bases, tables with a sorts-last hash), and
+    ``positions`` are *global* reference coordinates.
+    """
+
+    refs: jnp.ndarray  # [S, Lm] int8 haloed slices (sentinel padded)
+    offsets: jnp.ndarray  # [S] int32 global coord of each slice's base 0
+    hashes: jnp.ndarray  # [S, Mm] uint32 sorted minimizer hashes
+    positions: jnp.ndarray  # [S, Mm] int32 GLOBAL minimizer positions
+
+
+@dataclass
+class ShardedIndex:
+    """Host handle: stacked shard arrays + layout + seeding parameters."""
+
+    arrays: ShardArrays
+    layout: ShardLayout
+    minimizer_w: int
+    minimizer_k: int
+    freq_frac: float = 0.0002
+
+    @property
+    def num_shards(self) -> int:
+        """Number of reference shards."""
+        return self.layout.num_shards
+
+    @property
+    def ref_len(self) -> int:
+        """Global reference length in bases."""
+        return self.layout.ref_len
+
+    @property
+    def layout_key(self) -> tuple:
+        """Hashable geometry key (partition bounds + padded array dims)."""
+        return (self.layout.bounds, self.layout.halo, self.layout.ref_len,
+                int(self.arrays.refs.shape[1]),
+                int(self.arrays.hashes.shape[1]))
+
+
+def _partition_table(hashes: np.ndarray, positions: np.ndarray,
+                     layout: ShardLayout) -> list[tuple[np.ndarray,
+                                                        np.ndarray]]:
+    """Split a sorted global (hash, position) table by core ownership.
+
+    Filtering rows preserves the sort (by hash, then position), so each
+    shard's subset is directly ``searchsorted``-able.
+    """
+    out = []
+    for i in range(layout.num_shards):
+        lo, hi = layout.core(i)
+        m = (positions >= lo) & (positions < hi)
+        out.append((hashes[m], positions[m]))
+    return out
+
+
+def _stack_shards(ref: np.ndarray, layout: ShardLayout,
+                  tables: Sequence[tuple[np.ndarray, np.ndarray]]
+                  ) -> ShardArrays:
+    s = layout.num_shards
+    ranges = [layout.slice_range(i) for i in range(s)]
+    lm = max(hi - lo for lo, hi in ranges)
+    mm = max(1, max(len(h) for h, _ in tables))
+    refs = np.full((s, lm), SENTINEL, np.int8)
+    hashes = np.full((s, mm), _PAD_HASH, np.uint32)
+    positions = np.full((s, mm), _PAD_POS, np.int32)
+    offsets = np.zeros(s, np.int32)
+    for i, (lo, hi) in enumerate(ranges):
+        refs[i, : hi - lo] = ref[lo:hi]
+        offsets[i] = lo
+        h, p = tables[i]
+        hashes[i, : len(h)] = h
+        positions[i, : len(p)] = p
+    return ShardArrays(refs=jnp.asarray(refs), offsets=jnp.asarray(offsets),
+                       hashes=jnp.asarray(hashes),
+                       positions=jnp.asarray(positions))
+
+
+def build_sharded_index(
+    ref: np.ndarray,
+    num_shards: int,
+    *,
+    w: int = 10,
+    k: int = 15,
+    freq_frac: float = 0.0002,
+    halo: int = DEFAULT_HALO,
+    hashes: np.ndarray | None = None,
+    positions: np.ndarray | None = None,
+) -> ShardedIndex:
+    """Partition a reference (and its global minimizer table) into shards.
+
+    The minimizer table is built globally (global frequency filter, as
+    in the paper's offline pre-processing) unless an existing global
+    ``hashes``/``positions`` pair is passed — `from_epoched` reuses the
+    single-device index's table so 1-shard and N-shard serving seed
+    from literally the same entries.
+    """
+    ref = np.asarray(ref, np.int8)
+    layout = plan_layout(len(ref), num_shards, halo)
+    if hashes is None or positions is None:
+        idx = build_index(ref, w=w, k=k, freq_frac=freq_frac)
+        hashes, positions = idx.hashes, idx.positions
+    tables = _partition_table(np.asarray(hashes), np.asarray(positions),
+                              layout)
+    return ShardedIndex(arrays=_stack_shards(ref, layout, tables),
+                        layout=layout, minimizer_w=w, minimizer_k=k,
+                        freq_frac=freq_frac)
+
+
+class EpochedShardedIndex:
+    """Epoch-vector-stamped handle around a ``ShardedIndex``.
+
+    One epoch counter per shard: ``refresh()`` (new reference) bumps
+    every counter, ``refresh_shard(i)`` (failover re-materialization of
+    a lost device's slice) bumps only shard ``i``'s.  ``current()``
+    returns ``(index, token)`` where the token is the hashable
+    ``(layout_key, epoch vector)`` pair — the serve cache keys on the
+    whole token, so shard-local epochs can never alias across layouts
+    or across different shards' refresh histories (the
+    `serve/cache.py` collision bug this type exists to prevent).
+    """
+
+    def __init__(self, index: ShardedIndex, ref: np.ndarray,
+                 epochs: Sequence[int] | None = None):
+        self._lock = threading.Lock()
+        self._index = index
+        self._ref = np.asarray(ref, np.int8)
+        self.epochs = list(epochs) if epochs is not None \
+            else [0] * index.num_shards
+        if len(self.epochs) != index.num_shards:
+            raise ValueError(
+                f"epoch vector has {len(self.epochs)} entries for "
+                f"{index.num_shards} shards")
+        self._build_kw = dict(w=index.minimizer_w, k=index.minimizer_k,
+                              freq_frac=index.freq_frac,
+                              halo=index.layout.halo)
+
+    @property
+    def index(self) -> ShardedIndex:
+        """The current ``ShardedIndex`` (unsynchronized peek)."""
+        return self._index
+
+    def epoch_token(self) -> tuple:
+        """Hashable (layout, epoch-vector) cache-key component."""
+        with self._lock:
+            return (self._index.layout_key, tuple(self.epochs))
+
+    def current(self) -> tuple[ShardedIndex, tuple]:
+        """Consistent (index, epoch token) pair for one mapping batch."""
+        with self._lock:
+            return self._index, (self._index.layout_key, tuple(self.epochs))
+
+    def refresh(self, ref: np.ndarray, **build_kw) -> tuple:
+        """Re-partition from a new reference; bumps every shard's epoch."""
+        kw = {**self._build_kw, **build_kw}
+        new = build_sharded_index(ref, self._index.num_shards, **kw)
+        with self._lock:
+            self._index = new
+            self._ref = np.asarray(ref, np.int8)
+            self._build_kw = kw
+            self.epochs = [e + 1 for e in self.epochs]
+            return (new.layout_key, tuple(self.epochs))
+
+    def refresh_shard(self, i: int) -> tuple:
+        """Re-materialize shard ``i`` from the retained host reference.
+
+        Failover path: a shard whose device was lost is rebuilt in
+        place (same layout, same global table) and only its epoch
+        counter bumps — results cached against the other shards'
+        entries stay addressable under the new token's vector only if
+        the cache chooses to; keying on the whole vector keeps it
+        conservative and correct.
+        """
+        if not 0 <= i < self._index.num_shards:
+            raise IndexError(f"shard {i} out of range "
+                             f"(num_shards={self._index.num_shards})")
+        idx = build_index(self._ref, w=self._index.minimizer_w,
+                          k=self._index.minimizer_k,
+                          freq_frac=self._index.freq_frac)
+        layout = self._index.layout
+        lo, hi = layout.core(i)
+        slo, shi = layout.slice_range(i)
+        a = self._index.arrays
+        m = (idx.positions >= lo) & (idx.positions < hi)
+        h, p = idx.hashes[m], idx.positions[m]
+        mm = a.hashes.shape[1]
+        row_h = np.full(mm, _PAD_HASH, np.uint32)
+        row_p = np.full(mm, _PAD_POS, np.int32)
+        row_h[: len(h)] = h[:mm]
+        row_p[: len(p)] = p[:mm]
+        row_r = np.full(a.refs.shape[1], SENTINEL, np.int8)
+        row_r[: shi - slo] = self._ref[slo:shi]
+        with self._lock:
+            self._index = ShardedIndex(
+                arrays=ShardArrays(
+                    refs=a.refs.at[i].set(jnp.asarray(row_r)),
+                    offsets=a.offsets,
+                    hashes=a.hashes.at[i].set(jnp.asarray(row_h)),
+                    positions=a.positions.at[i].set(jnp.asarray(row_p))),
+                layout=layout, minimizer_w=self._index.minimizer_w,
+                minimizer_k=self._index.minimizer_k,
+                freq_frac=self._index.freq_frac)
+            self.epochs[i] += 1
+            return (self._index.layout_key, tuple(self.epochs))
+
+
+def from_epoched(epi: EpochedIndex | ReferenceIndex, num_shards: int, *,
+                 halo: int = DEFAULT_HALO,
+                 w: int | None = None, k: int | None = None,
+                 freq_frac: float | None = None) -> EpochedShardedIndex:
+    """Shard an existing (epoched) single-device index.
+
+    Reuses the host copy of the reference *and* the already-built
+    global minimizer table, so the sharded index seeds from exactly the
+    entries the single-device path seeds from (a requirement for
+    byte-identical 1-vs-N output, since frequency filtering depends on
+    global counts).
+    """
+    if isinstance(epi, EpochedIndex):
+        kw = epi._build_kw
+        w = kw["w"] if w is None else w
+        k = kw["k"] if k is None else k
+        freq_frac = kw.get("freq_frac", 0.0002) if freq_frac is None \
+            else freq_frac
+        ridx = epi.index
+    else:
+        ridx = epi
+        if w is None or k is None:
+            raise ValueError("sharding a bare ReferenceIndex needs explicit "
+                             "w/k (it does not record its build params)")
+        freq_frac = 0.0002 if freq_frac is None else freq_frac
+    ref = np.asarray(ridx.ref, np.int8)
+    sharded = build_sharded_index(
+        ref, num_shards, w=w, k=k, freq_frac=freq_frac, halo=halo,
+        hashes=np.asarray(ridx.hashes), positions=np.asarray(ridx.positions))
+    return EpochedShardedIndex(sharded, ref)

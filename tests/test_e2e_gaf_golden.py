@@ -28,11 +28,14 @@ BASE_ARGS = [
 ]
 
 
-def _run_gaf(tmp_path, backend: str, *, online: bool = False) -> bytes:
-    out = tmp_path / f"{backend}{'_online' if online else ''}.gaf"
+def _run_gaf(tmp_path, backend: str, *, online: bool = False,
+             shards: int = 1) -> bytes:
+    out = tmp_path / f"{backend}{'_online' if online else ''}_s{shards}.gaf"
     argv = BASE_ARGS + ["--align-backend", backend, "--out", str(out)]
     if online:
         argv += ["--online", "--rate", "2000"]
+    if shards != 1:
+        argv += ["--num-shards", str(shards)]
     serve_genomics.main(argv)
     return out.read_bytes()
 
@@ -48,6 +51,14 @@ def test_online_gaf_matches_golden(tmp_path):
     drain (same engine underneath) regardless of arrival timing."""
     assert _run_gaf(tmp_path, "graph_lax", online=True) == \
         GOLDEN.read_bytes(), "online GAF diverged from the snapshot"
+
+
+def test_sharded_gaf_matches_golden(tmp_path):
+    """Sharded graph serving (repro.shard tile/backbone partitioning)
+    must emit byte-identical GAF — positions, CIGARs, and node paths
+    merge to the single-device winners."""
+    assert _run_gaf(tmp_path, "graph_lax", shards=2) == \
+        GOLDEN.read_bytes(), "GAF with --num-shards 2 diverged"
 
 
 def test_gaf_rows_are_valid_gaf(tmp_path):

@@ -27,11 +27,14 @@ BASE_ARGS = [
 ]
 
 
-def _run_paf(tmp_path, backend: str, *, online: bool = False) -> bytes:
-    out = tmp_path / f"{backend}{'_online' if online else ''}.paf"
+def _run_paf(tmp_path, backend: str, *, online: bool = False,
+             shards: int = 1) -> bytes:
+    out = tmp_path / f"{backend}{'_online' if online else ''}_s{shards}.paf"
     argv = BASE_ARGS + ["--align-backend", backend, "--out", str(out)]
     if online:
         argv += ["--online", "--rate", "2000"]
+    if shards != 1:
+        argv += ["--num-shards", str(shards)]
     serve_genomics.main(argv)
     return out.read_bytes()
 
@@ -48,3 +51,18 @@ def test_online_paf_matches_golden(tmp_path, backend):
     drain (same engine underneath) regardless of arrival timing."""
     assert _run_paf(tmp_path, backend, online=True) == GOLDEN.read_bytes(), \
         f"online PAF for backend {backend} diverged from the snapshot"
+
+
+@pytest.mark.parametrize("shards", [2, 3])
+def test_sharded_paf_matches_golden(tmp_path, shards):
+    """Sharded serving (repro.shard scatter/merge) must emit the same
+    bytes as the single-device path — the merge rule is shard-layout
+    independent and shard windows are byte-identical in the halos."""
+    assert _run_paf(tmp_path, "lax", shards=shards) == GOLDEN.read_bytes(), \
+        f"PAF with --num-shards {shards} diverged from the snapshot"
+
+
+def test_sharded_online_paf_matches_golden(tmp_path):
+    """Sharding composes with the online Poisson admission path."""
+    assert _run_paf(tmp_path, "lax", online=True, shards=2) == \
+        GOLDEN.read_bytes(), "online sharded PAF diverged from the snapshot"

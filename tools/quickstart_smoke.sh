@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Quickstart-drift gate: execute every README Quickstart command.
+#
+# Each invocation below is a README §Quickstart command verbatim, plus
+# size-only flags (--ref-len/--reads/--read-len/--batch) appended so CI
+# finishes in minutes — the flags exercised by the docs (--online,
+# --align-backend, --mode graph, --num-shards, --smoke) are untouched.
+# A command that rots (renamed flag, moved module, changed default)
+# fails this script and therefore CI, so the README cannot drift again.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+SMALL="--ref-len 4000 --reads 12 --read-len 100 --batch 4"
+OUT=$(mktemp -d)
+trap 'rm -rf "$OUT"' EXIT
+
+echo "== quickstart example"
+python examples/quickstart.py
+
+echo "== offline read-mapping service (PAF)"
+python -m repro.launch.serve_genomics $SMALL --out "$OUT/out.paf"
+
+echo "== online Poisson serving"
+python -m repro.launch.serve_genomics --online --rate 200 $SMALL \
+    --out "$OUT/online.paf"
+cmp "$OUT/out.paf" "$OUT/online.paf"  # README: both modes emit identical PAF
+
+echo "== align-backend selection (pallas_dc_v2, interpret on CPU)"
+python -m repro.launch.serve_genomics --align-backend pallas_dc_v2 $SMALL \
+    --out "$OUT/pallas.paf"
+cmp "$OUT/out.paf" "$OUT/pallas.paf"  # README: byte-identical PAF
+
+echo "== graph workload (GAF)"
+python -m repro.launch.serve_genomics --mode graph --online --rate 200 \
+    $SMALL --out "$OUT/out.gaf"
+test -s "$OUT/out.gaf"
+
+echo "== sharded serving (--num-shards 2, byte-identical PAF)"
+python -m repro.launch.serve_genomics --num-shards 2 $SMALL \
+    --out "$OUT/sharded.paf"
+cmp "$OUT/out.paf" "$OUT/sharded.paf"
+
+echo "quickstart smoke: all README commands ran"

@@ -31,7 +31,7 @@ def _ref_fn(texts, patterns, p_lens, t_lens, *, cfg: GenASMConfig,
     # same ops width as the windowed backends; distances-only mode keeps
     # the [b, 1] padded shape but still reports the true n_ops (the
     # traceback is O(n+m), trivial next to the O(nm) DP already paid)
-    cap = cfg.n_windows(p_cap) * 2 * cfg.commit if emit_cigar else 1
+    cap = cfg.ops_cap(p_cap) if emit_cigar else 1
     shapes = (
         jax.ShapeDtypeStruct((b,), jnp.int32),       # distance
         jax.ShapeDtypeStruct((b, cap), jnp.int8),    # ops

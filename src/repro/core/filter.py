@@ -5,6 +5,18 @@ short read against each candidate region; candidates above the edit
 threshold are rejected before the expensive alignment step.  Because the
 distance is exact (not an approximation like Shouji's), the false-accept
 rate is ~0 by construction — the paper's headline accuracy result.
+
+The q-gram primitives below serve the *tile pre-filter* tier in front of
+that exact filter (the survey's cheap-screen-before-exact-filter
+cascade): per-tile Bloom filters over the tile's q-grams let the graph
+mapper reject candidate tiles that cannot contain a ≤k mapping with one
+vectorized count — no GenASM-DC launch at all.  Soundness comes from the
+q-gram lemma: a pattern of length m within edit distance k of some text
+shares at least ``(m - q + 1) - q·k`` q-grams with it, so a tile whose
+Bloom filter confirms fewer (minus a slack term for q-grams the graph
+linearization cannot represent as substrings) is provably distance > k.
+Bloom false positives and wildcard-touching q-grams only *raise* the
+confirmed count, keeping the screen one-sided.
 """
 from __future__ import annotations
 
@@ -15,6 +27,75 @@ import jax.numpy as jnp
 
 from .bitvector import SENTINEL, WILDCARD
 from .genasm_dc import bitap_search
+from .segram.minimizer import hash32, kmer_codes
+
+QGRAM_Q = 8  # q-gram width of the tile screen (2-bit packed, 16 bits)
+BLOOM_BITS = 4096  # per-tile Bloom width: 128 uint32 words
+BLOOM_WORDS = BLOOM_BITS // 32
+_INVALID = jnp.uint32(0xFFFFFFFF)
+
+
+def qgram_codes(seq: jnp.ndarray, q: int = QGRAM_Q) -> jnp.ndarray:
+    """Packed 2-bit q-gram codes per position (``0xFFFFFFFF`` where the
+    window touches a non-ACGT char) — `kmer_codes` at the screen's q."""
+    return kmer_codes(seq, q)
+
+
+def _bloom_probes(codes: jnp.ndarray):
+    """Two bit positions per code from one murmur-mixed hash."""
+    h = hash32(codes)
+    return h & jnp.uint32(BLOOM_BITS - 1), \
+        (h >> 13) & jnp.uint32(BLOOM_BITS - 1)
+
+
+def qgram_bloom(bases: jnp.ndarray, n_valid, *, q: int = QGRAM_Q
+                ) -> jnp.ndarray:
+    """[n] int8 bases → ``[BLOOM_WORDS]`` uint32 Bloom of its q-grams.
+
+    Only windows fully inside the first ``n_valid`` chars are inserted;
+    windows touching non-ACGT chars (sentinel padding) are skipped —
+    queries count those read-side as hits, so skipping stays sound.
+    """
+    codes = qgram_codes(bases, q)
+    npos = codes.shape[0]
+    ok = (jnp.arange(npos) + q <= n_valid) & (codes != _INVALID)
+    bits = jnp.zeros((BLOOM_BITS + 1,), bool)
+    for probe in _bloom_probes(codes):
+        bits = bits.at[jnp.where(ok, probe, BLOOM_BITS)].set(True)
+    packed = bits[:BLOOM_BITS].reshape(BLOOM_WORDS, 32)
+    shifts = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(jnp.where(packed, shifts[None, :], jnp.uint32(0)),
+                   axis=-1, dtype=jnp.uint32)
+
+
+def qgram_hits(codes: jnp.ndarray, pos_ok: jnp.ndarray, bloom: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Count query q-grams the Bloom filter *may* contain.
+
+    ``codes``/``pos_ok`` are ``[..., P]`` (uint32 codes, bool real-window
+    mask), ``bloom`` is ``[..., BLOOM_WORDS]`` with identical leading
+    dims.  Invalid (wildcard-touching) codes count as hits — the screen
+    must never undercount against a text that could match them.
+    """
+    may = codes == _INVALID
+    hit = jnp.ones_like(may)
+    for probe in _bloom_probes(codes):
+        word = jnp.take_along_axis(bloom, (probe >> 5).astype(jnp.int32),
+                                   axis=-1)
+        hit = hit & (((word >> (probe & 31)) & 1) != 0)
+    return jnp.sum((hit | may) & pos_ok, axis=-1, dtype=jnp.int32)
+
+
+def qgram_min_hits(n_pos, k: int, slack, *, q: int = QGRAM_Q):
+    """q-gram-lemma lower bound on confirmed q-grams at distance ≤ k.
+
+    ``n_pos`` is the pattern's real q-gram count (``m - q + 1``), each
+    edit can destroy at most ``q`` of them, and ``slack`` bounds the
+    q-grams a matching graph path may spell across hop>1 edges (chains
+    that are not substrings of the tile linearization, hence absent from
+    the Bloom filter).  Non-positive bounds mean "cannot prune".
+    """
+    return n_pos - q * k - slack
 
 
 @partial(jax.jit, static_argnames=("m_bits", "k"))

@@ -43,6 +43,16 @@ class GenASMConfig(NamedTuple):
     def n_windows(self, max_pattern_len: int) -> int:
         return -(-max_pattern_len // self.commit) + 2
 
+    def ops_cap(self, p_cap: int) -> int:
+        """CIGAR ops/path buffer width every backend emits at ``p_cap``.
+
+        Each of the ``n_windows`` steps commits at most ``2·commit`` ops
+        (all-insertion worst case).  Shared by the align backends and the
+        graph mapper's zero-survivor short-circuit, whose canned result
+        must be shaped exactly like a real align launch's.
+        """
+        return self.n_windows(p_cap) * 2 * self.commit
+
 
 class AlignResult(NamedTuple):
     distance: jnp.ndarray  # int32 total edit distance (approx. per paper)

@@ -9,7 +9,8 @@ from .backends import as_graph_text, batched_graph_align  # noqa: F401
 from .index import (EpochedGraphIndex, GraphArrays, GraphIndex,  # noqa: F401
                     build_epoched_graph_index, build_graph_index,
                     load_graph_index, save_graph_index)
-from .mapper import (GraphMapResult, graph_backend_name,  # noqa: F401
-                     map_batch, map_batch_index)
+from .mapper import (GraphMapExecutor, GraphMapResult,  # noqa: F401
+                     graph_backend_name, map_batch, map_batch_index,
+                     tile_prefilter, tile_rung, unmapped_result)
 from .windowed import (bitalign_search, graph_align,  # noqa: F401
                        pack_graph_text, pack_linear_text, unpack_graph_text)

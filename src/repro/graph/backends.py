@@ -75,7 +75,7 @@ def batched_graph_align(
     if p_cap is None:
         p_cap = int(patterns.shape[-1])
     n_win = cfg.n_windows(p_cap)
-    max_steps = 2 * cfg.commit
+    max_steps = 2 * cfg.commit  # ops emitted per window; cap = cfg.ops_cap
     w, o, k = cfg.w, cfg.o, cfg.k
     b = texts.shape[0]
     p_lens = p_lens.astype(jnp.int32)
@@ -125,7 +125,7 @@ def batched_graph_align(
     nodes_w = jnp.swapaxes(nodes_w, 0, 1)
     n_ops_w = jnp.swapaxes(n_ops_w, 0, 1)  # [B, n_win]
 
-    cap = n_win * max_steps
+    cap = cfg.ops_cap(p_cap)
     if emit_cigar:
         out_ops = jax.vmap(
             lambda v, n: _scatter_windows(v, n, cap, OP_PAD, jnp.int8))(

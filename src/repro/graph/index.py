@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitvector import SENTINEL
+from repro.core.filter import QGRAM_Q, qgram_bloom
 from repro.core.segram.graph import (GenomeGraph, Variant, build_graph,
                                      hop_boundary_mask)
 from repro.core.segram.minimizer import build_index
@@ -59,6 +60,8 @@ class GraphArrays(NamedTuple):
     tile_valid: jnp.ndarray  # [C] int32 valid node count per tile
     idx_hashes: jnp.ndarray  # [M] uint32 sorted backbone minimizers
     idx_positions: jnp.ndarray  # [M] int32
+    tile_bloom: jnp.ndarray  # [C, BLOOM_WORDS] uint32 per-tile q-gram Bloom
+    tile_slack: jnp.ndarray  # [C] int32 (q-1)·(hop>1 edges) screen slack
 
 
 @dataclass
@@ -99,7 +102,17 @@ def _build_tiles(bases: jnp.ndarray, succ: jnp.ndarray, *, tile_len: int,
     ts = jnp.where(inb, succ[idxc], jnp.uint32(0))
     valid = jnp.clip(n - starts, 0, tile_len).astype(jnp.int32)
     mask = jax.vmap(lambda v: hop_boundary_mask(tile_len, v))(valid)
-    return pack_graph_text(tb, ts & mask), valid
+    ts_m = ts & mask
+    # tile pre-filter payload: a Bloom filter over the tile's q-grams and
+    # the q-gram-lemma slack for alt paths — a matching path may spell up
+    # to q-1 q-grams across each hop>1 edge (bits 1.. of the masked
+    # hopBits) that are not substrings of the linearization
+    bloom = jax.vmap(qgram_bloom)(tb, valid)
+    in_valid = jnp.arange(tile_len)[None, :] < valid[:, None]
+    hop_edges = jnp.where(in_valid, jax.lax.population_count(ts_m >> 1), 0)
+    slack = ((QGRAM_Q - 1) *
+             jnp.sum(hop_edges, axis=-1)).astype(jnp.int32)
+    return pack_graph_text(tb, ts_m), valid, bloom, slack
 
 
 def build_graph_index(
@@ -124,8 +137,8 @@ def build_graph_index(
     bases = jnp.asarray(g.bases)
     succ = jnp.asarray(g.succ_bits)
     tile_len = tile_stride + margin + window
-    tiles, valid = _build_tiles(bases, succ, tile_len=tile_len,
-                                tile_stride=tile_stride)
+    tiles, valid, bloom, slack = _build_tiles(bases, succ, tile_len=tile_len,
+                                              tile_stride=tile_stride)
     arrays = GraphArrays(
         bases=bases,
         succ_bits=succ,
@@ -135,6 +148,8 @@ def build_graph_index(
         tile_valid=valid,
         idx_hashes=jnp.asarray(idx.hashes),
         idx_positions=jnp.asarray(idx.positions),
+        tile_bloom=bloom,
+        tile_slack=slack,
     )
     return GraphIndex(arrays=arrays, ref=np.asarray(ref, np.int8),
                       tile_len=tile_len, tile_stride=tile_stride,
@@ -218,8 +233,8 @@ def load_graph_index(path: str | Path) -> GraphIndex:
             int(x) for x in z["meta"])
         bases = jnp.asarray(z["bases"])
         succ = jnp.asarray(z["succ_bits"])
-        tiles, valid = _build_tiles(bases, succ, tile_len=tile_len,
-                                    tile_stride=tile_stride)
+        tiles, valid, bloom, slack = _build_tiles(
+            bases, succ, tile_len=tile_len, tile_stride=tile_stride)
         arrays = GraphArrays(
             bases=bases,
             succ_bits=succ,
@@ -229,6 +244,8 @@ def load_graph_index(path: str | Path) -> GraphIndex:
             tile_valid=valid,
             idx_hashes=jnp.asarray(z["idx_hashes"]),
             idx_positions=jnp.asarray(z["idx_positions"]),
+            tile_bloom=bloom,
+            tile_slack=slack,
         )
         return GraphIndex(arrays=arrays, ref=z["ref"].astype(np.int8),
                           tile_len=tile_len, tile_stride=tile_stride,

@@ -106,6 +106,9 @@ class EngineConfig:
     minimizer_w: int = 10
     minimizer_k: int = 15
     cache_capacity: int = 4096  # 0 disables the result cache
+    # graph workload: q-gram tile screen before the BitAlign-DC filter
+    # (bitwise-neutral on output; off only for A/B measurement)
+    graph_prefilter: bool = True
 
     def __post_init__(self):
         if not self.buckets:
@@ -385,11 +388,19 @@ class ServeEngine:
         return (cap, c.workload, self.align_backend, c.genasm,
                 min(c.filter_bits, cap), c.filter_k, c.max_candidates,
                 c.num_shards, c.shard_candidates,
-                c.minimizer_w, c.minimizer_k, c.max_batch, geom)
+                c.minimizer_w, c.minimizer_k, c.max_batch, geom,
+                c.graph_prefilter)
 
-    def _count_trace(self, cap: int) -> None:
-        """Executor-body hook: runs at trace time only → counts retraces."""
-        self.trace_counts[cap] = self.trace_counts.get(cap, 0) + 1
+    def _count_trace(self, cap: int, stage=None) -> None:
+        """Executor-body hook: runs at trace time only → counts retraces.
+
+        Linear executors count per bucket cap; graph executors pass a
+        stage key (``("prefilter",)``, ``(n_cap,)`` per tile-count rung,
+        ``("align",)``), counted as ``(cap, *stage)`` — the engine's
+        (read-length rung, tile-count rung) bucket ladder is assertable
+        as one trace per pair."""
+        key = cap if stage is None else (cap,) + tuple(stage)
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
 
     def _executor(self, cap: int, geom=None, sharded_index=None):
         """One compiled ``map_batch`` per (bucket_cap, workload, backend,
@@ -426,6 +437,7 @@ class ServeEngine:
                     sharded_index, cfg=c.genasm, p_cap=cap,
                     filter_bits=fbits, filter_k=c.filter_k,
                     shard_candidates=n_cand, backend=backend,
+                    prefilter=c.graph_prefilter,
                     trace_hook=partial(self._count_trace, cap))
             elif c.num_shards > 1:
                 from repro.shard import ShardedMapExecutor
@@ -436,18 +448,18 @@ class ServeEngine:
                     shard_candidates=n_cand, backend=backend,
                     trace_hook=partial(self._count_trace, cap))
             elif c.workload == "graph":
-                from repro.graph import mapper as graph_mapper
+                from repro.graph.mapper import GraphMapExecutor
 
-                def run(arrays, arr, lens, _cap=cap):
-                    self._count_trace(_cap)
-                    return graph_mapper.map_batch(
-                        arrays, arr, lens, tile_stride=geom, cfg=c.genasm,
-                        p_cap=_cap, filter_bits=fbits, filter_k=c.filter_k,
-                        max_candidates=c.max_candidates,
-                        minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
-                        backend=backend)
-
-                fn = jax.jit(run)
+                # host-orchestrated: the executor jits its own stages
+                # (one prefilter + align trace per cap, one candidate
+                # stage per tile-count rung — the graph bucket ladder)
+                fn = GraphMapExecutor(
+                    tile_stride=geom, cfg=c.genasm, p_cap=cap,
+                    filter_bits=fbits, filter_k=c.filter_k,
+                    max_candidates=c.max_candidates,
+                    minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
+                    backend=backend, prefilter=c.graph_prefilter,
+                    trace_hook=partial(self._count_trace, cap))
             else:
                 def run(index, arr, lens, _cap=cap):
                     self._count_trace(_cap)
@@ -564,6 +576,10 @@ class ServeEngine:
         m.counter("bases_useful").inc(real)
         m.counter("bases_padded_read").inc(len(reqs) * cap - real)
         m.counter("bases_padded_slot").inc((c.max_batch - len(reqs)) * cap)
+        stats = getattr(fn, "last_stats", None)
+        if stats:  # graph executors: tile-screen / DC-occupancy counters
+            for name, v in stats.items():
+                m.counter(f"graph_{name}").inc(int(v))
 
         done = time.monotonic()
         results = []

@@ -5,6 +5,16 @@ Thread-safe, dependency-free observability for the micro-batching engine
 bases (the waste length bucketing removes), result-cache hits, and
 end-to-end latency; `render()` emits a Prometheus-style text page and
 `snapshot()` a plain dict for JSON perf logs (benchmarks/serve_engine.py).
+
+Graph-workload flushes additionally record the tile pre-filter's
+effectiveness, forwarded from the executor's ``last_stats``:
+``graph_candidate_slots`` (dense candidate slots offered),
+``graph_tiles_live`` (slots with seed votes), ``graph_tiles_kept`` /
+``graph_tiles_pruned`` (q-gram screen verdicts), ``graph_dc_rows`` vs
+``graph_dc_rows_dense`` (BitAlign-DC rows actually launched at the
+chosen tile-count rung vs the dense [B·C] launch it replaced), and
+``graph_reads_zero_survivor`` (reads short-circuited to the unmapped
+result without any DC/align work).
 """
 from __future__ import annotations
 

@@ -1,15 +1,18 @@
 """Shard-parallel graph mapping: the GAF twin of `shard.mapper`.
 
-Same three-beat pipeline as the linear sharded mapper — scatter the
-read batch to every graph shard, merge per-shard winners on the host,
-one batched graph ``align_batch`` call — with the per-shard stage being
-`repro.graph.mapper.graph_candidate_stage` over that shard's
-:class:`~repro.graph.mapper.GraphView` (local tile/backbone slices,
-global ids).  The winner rule is the lexicographic
-``min (filter distance, origin node, tile)`` in global coordinates, the
-same rule the whole-graph mapper applies across its candidate axis, so
-GAF output is byte-identical at 1 and N shards.  Winners travel with
-their packed window bytes *and* per-node backbone coordinates
+Same pipeline as the whole-graph `repro.graph.mapper.GraphMapExecutor`,
+scattered: every shard runs the seed + q-gram tile screen
+(`tile_prefilter`) over its own :class:`~repro.graph.mapper.GraphView`,
+a host sync on the per-shard survivor counts picks one shared
+`tile_rung`, each shard compacts its survivors into that many DC rows
+(`graph_candidate_stage` with ``pf``/``n_cap``), per-shard winners merge
+on the host by the lexicographic ``min (filter distance, origin node,
+tile)`` in global coordinates, and one batched graph ``align_batch``
+call finishes.  The screen and compaction are bitwise-neutral per shard
+(see `graph/mapper`), and the merge rule is the same one the whole-graph
+mapper applies across its candidate axis — so GAF output stays
+byte-identical at 1 and N shards, prefilter on or off.  Winners travel
+with their packed window bytes *and* per-node backbone coordinates
 (``bwin``), so the align stage needs no graph arrays at all.
 """
 from __future__ import annotations
@@ -25,8 +28,9 @@ from repro.core.genasm import GenASMConfig
 from repro.core.mapper import POS_SENTINEL
 from repro.dist import sharding as dist_sharding
 from repro.graph.mapper import (CandidateStageResult, GraphMapResult,
-                                GraphView, align_winners,
-                                graph_backend_name, graph_candidate_stage)
+                                GraphView, _env_prefilter, align_winners,
+                                graph_backend_name, graph_candidate_stage,
+                                tile_prefilter, tile_rung, unmapped_result)
 
 from .graph_partition import GraphShardArrays, ShardedGraphIndex
 
@@ -51,23 +55,41 @@ def validate_graph_geometry(sharded: ShardedGraphIndex, *, p_cap: int,
             f"halo >= {need}")
 
 
-def _stage_one_shard(tiles, tvalid, tbase, nob, nboff, bb, nbase, hashes,
-                     poss, reads, lens, *, static):
-    """One graph shard's candidate stage over the whole read batch."""
-    view = GraphView(
+def _shard_view(tiles, tvalid, tbase, nob, nboff, bb, nbase, hashes, poss,
+                tbloom, tslack) -> GraphView:
+    """One shard's arrays (`GraphShardArrays` row order) as a GraphView."""
+    return GraphView(
         tile_gtext=tiles, tile_valid=tvalid, tile_base=tbase,
         node_of_backbone=nob, nb_offset=nboff, backbone=bb,
-        node_base=nbase, idx_hashes=hashes, idx_positions=poss)
-    return graph_candidate_stage(view, reads, lens, **static)
+        node_base=nbase, idx_hashes=hashes, idx_positions=poss,
+        tile_bloom=tbloom, tile_slack=tslack)
+
+
+def _pf_one_shard(*args, static):
+    """One graph shard's seed + tile screen over the whole read batch."""
+    arrs, (reads, lens) = args[:-2], args[-2:]
+    return tile_prefilter(_shard_view(*arrs), reads, lens, **static)
+
+
+def _stage_one_shard(*args, n_cap, static):
+    """One shard's compacted candidate stage (survivors from ``pf``)."""
+    arrs, (reads, lens, pf) = args[:-3], args[-3:]
+    return graph_candidate_stage(_shard_view(*arrs), reads, lens, pf=pf,
+                                 n_cap=n_cap, **static)
 
 
 class ShardedGraphMapExecutor:
-    """Compiled scatter/merge/align pipeline for one sharded graph index.
+    """Compiled scatter/screen/merge/align pipeline for one sharded graph.
 
-    Mirrors `shard.mapper.ShardedMapExecutor`: a ``shard_map`` (or
-    stacked ``vmap``) candidate stage, a host lexicographic merge, and
-    one jitted graph-align stage producing
-    :class:`repro.graph.mapper.GraphMapResult`.
+    Mirrors `graph.mapper.GraphMapExecutor` across shards: a
+    ``shard_map`` (or stacked ``vmap``) prefilter stage, a host sync
+    that picks one `tile_rung` from the worst shard's survivor count, a
+    per-rung compiled compacted candidate stage, the host lexicographic
+    merge, and one jitted graph-align stage.  ``trace_hook`` (if given)
+    is called with a hashable stage key at trace time —
+    ``("prefilter",)``, ``(n_cap,)`` per rung, and ``("align",)`` — or
+    with no argument if it doesn't accept one (legacy align-only hook).
+    ``last_stats`` carries pruning/occupancy counters for the engine.
     """
 
     def __init__(self, sharded: ShardedGraphIndex, *,
@@ -79,12 +101,34 @@ class ShardedGraphMapExecutor:
                  backend: str | None = None,
                  block_bt: int | None = None,
                  force_vmap: bool = False,
+                 prefilter: bool | None = None,
                  trace_hook=None):
         validate_graph_geometry(sharded, p_cap=p_cap, filter_k=filter_k,
                                 cfg=cfg)
         self.num_shards = sharded.num_shards
         self.backend = graph_backend_name(backend)
+        self.cfg = cfg
+        self.p_cap = p_cap
+        self.shard_candidates = shard_candidates
+        self.prefilter = _env_prefilter(prefilter)
         t_cap = p_cap + 2 * cfg.w
+
+        def hook(key):
+            if trace_hook is None:
+                return
+            try:
+                trace_hook(key)
+            except TypeError:
+                trace_hook()
+
+        self._hook = hook
+        static_pf = dict(
+            tile_stride=sharded.tile_stride, n_tiles=sharded.n_tiles,
+            backbone_len=sharded.ref_len,
+            filter_bits=min(filter_bits, p_cap), filter_k=filter_k,
+            max_candidates=shard_candidates,
+            minimizer_w=sharded.minimizer_w,
+            minimizer_k=sharded.minimizer_k, prefilter=self.prefilter)
         static = dict(
             tile_stride=sharded.tile_stride, n_tiles=sharded.n_tiles,
             backbone_len=sharded.ref_len, n_nodes=sharded.n_nodes,
@@ -93,7 +137,7 @@ class ShardedGraphMapExecutor:
             minimizer_w=sharded.minimizer_w,
             minimizer_k=sharded.minimizer_k,
             use_kernel=False, block_bt=block_bt, interpret=True)
-        stage = partial(_stage_one_shard, static=static)
+        pf_fn = partial(_pf_one_shard, static=static_pf)
 
         mesh = None if force_vmap else dist_sharding.shard_mesh(
             self.num_shards)
@@ -105,36 +149,69 @@ class ShardedGraphMapExecutor:
             arr_specs = tuple(dist_sharding.stacked_specs(
                 sharded.arrays, mesh))
 
-            def block_stage(*args):
+            def block_pf(*args):
+                self._hook(("prefilter",))
                 arrs, (reads, lens) = args[:-2], args[-2:]
-                out = stage(*[a[0] for a in arrs], reads, lens)
+                out = pf_fn(*[a[0] for a in arrs], reads, lens)
                 return jax.tree.map(lambda x: x[None], out)
 
-            self._stage = jax.jit(shard_map(
-                block_stage, mesh=mesh,
-                in_specs=arr_specs + (P(), P()),
+            self._pf = jax.jit(shard_map(
+                block_pf, mesh=mesh, in_specs=arr_specs + (P(), P()),
                 out_specs=P("shard")))
+
+            def make_stage(n_cap):
+                stage = partial(_stage_one_shard, n_cap=n_cap,
+                                static=static)
+
+                def block_stage(*args):
+                    self._hook((n_cap,))
+                    arrs, (reads, lens, pf) = args[:-3], args[-3:]
+                    pf0 = jax.tree.map(lambda x: x[0], pf)
+                    out = stage(*[a[0] for a in arrs], reads, lens, pf0)
+                    return jax.tree.map(lambda x: x[None], out)
+
+                return jax.jit(shard_map(
+                    block_stage, mesh=mesh,
+                    in_specs=arr_specs + (P(), P(), P("shard")),
+                    out_specs=P("shard")))
         else:
-            def stacked_stage(*args):
+            def stacked_pf(*args):
+                self._hook(("prefilter",))
                 arrs, (reads, lens) = args[:-2], args[-2:]
                 return jax.vmap(
-                    lambda *rows: stage(*rows, reads, lens))(*arrs)
+                    lambda *rows: pf_fn(*rows, reads, lens))(*arrs)
 
-            self._stage = jax.jit(stacked_stage)
+            self._pf = jax.jit(stacked_pf)
+
+            def make_stage(n_cap):
+                stage = partial(_stage_one_shard, n_cap=n_cap,
+                                static=static)
+
+                def stacked_stage(*args):
+                    self._hook((n_cap,))
+                    arrs, (reads, lens, pf) = args[:-3], args[-3:]
+                    return jax.vmap(
+                        lambda *rows: stage(*rows[:-1], reads, lens,
+                                            rows[-1]))(*arrs, pf)
+
+                return jax.jit(stacked_stage)
+
+        self._make_stage = make_stage
+        self._stages: dict[int, object] = {}
 
         def align_stage(merged: CandidateStageResult, reads, lens):
-            if trace_hook is not None:
-                trace_hook()
+            self._hook(("align",))
             return align_winners(merged, reads, lens, cfg=cfg, p_cap=p_cap,
                                  backend=self.backend, block_bt=block_bt)
 
         self._align = jax.jit(align_stage)
+        self.last_stats: dict = {}
 
-    def stage(self, arrays: GraphShardArrays, reads, read_lens
-              ) -> CandidateStageResult:
-        """Run the scatter stage: ``[S, B, ...]`` per-shard winners."""
-        return self._stage(*arrays, jnp.asarray(reads),
-                           jnp.asarray(read_lens, jnp.int32))
+    def _stage_for(self, n_cap: int):
+        fn = self._stages.get(n_cap)
+        if fn is None:
+            fn = self._stages[n_cap] = self._make_stage(n_cap)
+        return fn
 
     @staticmethod
     def merge(st: CandidateStageResult) -> CandidateStageResult:
@@ -161,12 +238,30 @@ class ShardedGraphMapExecutor:
 
     def __call__(self, arrays: GraphShardArrays, reads, read_lens
                  ) -> GraphMapResult:
-        """Map one batch: scatter → merge → single graph align call."""
-        st = self.stage(arrays, reads, read_lens)
+        """Map one batch: screen → rung-compacted scatter → merge → align."""
+        reads = jnp.asarray(reads)
+        lens = jnp.asarray(read_lens, jnp.int32)
+        b = int(reads.shape[0])
+        slots = b * self.shard_candidates
+        pf = self._pf(*arrays, reads, lens)  # leaves [S, B, ...]
+        n_keep = np.asarray(pf.n_keep)  # [S, B]
+        kept = int(n_keep.sum())
+        live = int(np.asarray(pf.n_live).sum())
+        # one rung for all shards: the worst shard's survivor count
+        n_cap = tile_rung(int(n_keep.sum(axis=1).max()), slots)
+        self.last_stats = dict(
+            candidate_slots=self.num_shards * slots, tiles_live=live,
+            tiles_kept=kept, tiles_pruned=live - kept,
+            dc_rows=self.num_shards * n_cap,
+            dc_rows_dense=self.num_shards * slots,
+            reads_zero_survivor=int((n_keep.sum(axis=0) == 0).sum()))
+        if n_cap == 0:
+            return jax.tree_util.tree_map(
+                np.asarray, unmapped_result(b, cfg=self.cfg,
+                                            p_cap=self.p_cap))
+        st = self._stage_for(n_cap)(*arrays, reads, lens, pf)
         merged = self.merge(st)
-        res = self._align(
-            jax.tree.map(jnp.asarray, merged), jnp.asarray(reads),
-            jnp.asarray(read_lens, jnp.int32))
+        res = self._align(jax.tree.map(jnp.asarray, merged), reads, lens)
         return jax.tree_util.tree_map(np.asarray, res)
 
 
@@ -187,16 +282,19 @@ def get_graph_executor(
     backend: str | None = None,
     block_bt: int | None = None,
     force_vmap: bool = False,
+    prefilter: bool | None = None,
 ) -> ShardedGraphMapExecutor:
     """Cached :class:`ShardedGraphMapExecutor` per (geometry, params)."""
+    prefilter = _env_prefilter(prefilter)
     key = (sharded.layout_key, cfg, p_cap, filter_bits, filter_k,
-           shard_candidates, backend, block_bt, force_vmap)
+           shard_candidates, backend, block_bt, force_vmap, prefilter)
     ex = _EXECUTORS.get(key)
     if ex is None:
         ex = ShardedGraphMapExecutor(
             sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
             filter_k=filter_k, shard_candidates=shard_candidates,
-            backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+            backend=backend, block_bt=block_bt, force_vmap=force_vmap,
+            prefilter=prefilter)
         _EXECUTORS[key] = ex
         while len(_EXECUTORS) > _EXECUTOR_CACHE_CAP:
             _EXECUTORS.popitem(last=False)
@@ -218,16 +316,19 @@ def map_batch_sharded_graph(
     backend: str | None = None,
     block_bt: int | None = None,
     force_vmap: bool = False,
+    prefilter: bool | None = None,
 ) -> GraphMapResult:
     """Map a read batch against a sharded variation-graph index.
 
     Returns the same :class:`repro.graph.mapper.GraphMapResult` (numpy
     leaves) as the single-device `graph.mapper.map_batch` —
     byte-identical positions, CIGARs, and GAF node paths for any shard
-    count.  Executors are cached per (geometry, parameters).
+    count, with the q-gram tile screen on or off.  Executors are cached
+    per (geometry, parameters).
     """
     ex = get_graph_executor(
         sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
         filter_k=filter_k, shard_candidates=shard_candidates,
-        backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+        backend=backend, block_bt=block_bt, force_vmap=force_vmap,
+        prefilter=prefilter)
     return ex(sharded.arrays, reads, read_lens)

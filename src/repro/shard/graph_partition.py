@@ -55,6 +55,8 @@ class GraphShardArrays(NamedTuple):
     node_base: jnp.ndarray  # [S] int32 global node id of slice row 0
     hashes: jnp.ndarray  # [S, Mm] uint32 sorted minimizer hashes
     positions: jnp.ndarray  # [S, Mm] int32 GLOBAL backbone positions
+    tile_bloom: jnp.ndarray  # [S, Ct, BLOOM_WORDS] uint32 q-gram Blooms
+    tile_slack: jnp.ndarray  # [S, Ct] int32 q-gram-lemma screen slack
 
 
 @dataclass
@@ -112,6 +114,8 @@ def shard_graph_index(gidx: GraphIndex, num_shards: int, *,
     backbone = np.asarray(a.backbone)
     tiles = np.asarray(a.tile_gtext)
     tvalid = np.asarray(a.tile_valid)
+    tbloom = np.asarray(a.tile_bloom)
+    tslack = np.asarray(a.tile_slack)
 
     rows = []
     for i in range(num_shards):
@@ -126,7 +130,8 @@ def shard_graph_index(gidx: GraphIndex, num_shards: int, *,
             tiles=tiles[tlo:thi], tvalid=tvalid[tlo:thi], tile_base=tlo,
             nob=nob[blo:bhi], nb_offset=blo,
             backbone=backbone[node_lo:node_hi], node_base=node_lo,
-            hashes=g_hash[m], positions=g_pos[m]))
+            hashes=g_hash[m], positions=g_pos[m],
+            tbloom=tbloom[tlo:thi], tslack=tslack[tlo:thi]))
 
     s = num_shards
     ct = max(len(r["tiles"]) for r in rows)
@@ -140,6 +145,8 @@ def shard_graph_index(gidx: GraphIndex, num_shards: int, *,
     st_bb = np.full((s, nb), -1, np.int32)
     st_hash = np.full((s, mm), _PAD_HASH, np.uint32)
     st_pos = np.full((s, mm), _PAD_POS, np.int32)
+    st_bloom = np.zeros((s, ct, tbloom.shape[-1]), np.uint32)
+    st_slack = np.zeros((s, ct), np.int32)
     tile_base = np.zeros(s, np.int32)
     nb_offset = np.zeros(s, np.int32)
     node_base = np.zeros(s, np.int32)
@@ -150,6 +157,8 @@ def shard_graph_index(gidx: GraphIndex, num_shards: int, *,
         st_bb[i, : len(r["backbone"])] = r["backbone"]
         st_hash[i, : len(r["hashes"])] = r["hashes"]
         st_pos[i, : len(r["positions"])] = r["positions"]
+        st_bloom[i, : len(r["tbloom"])] = r["tbloom"]
+        st_slack[i, : len(r["tslack"])] = r["tslack"]
         tile_base[i] = r["tile_base"]
         nb_offset[i] = r["nb_offset"]
         node_base[i] = r["node_base"]
@@ -158,7 +167,8 @@ def shard_graph_index(gidx: GraphIndex, num_shards: int, *,
         tile_base=jnp.asarray(tile_base), node_of_backbone=jnp.asarray(st_nob),
         nb_offset=jnp.asarray(nb_offset), backbone=jnp.asarray(st_bb),
         node_base=jnp.asarray(node_base), hashes=jnp.asarray(st_hash),
-        positions=jnp.asarray(st_pos))
+        positions=jnp.asarray(st_pos), tile_bloom=jnp.asarray(st_bloom),
+        tile_slack=jnp.asarray(st_slack))
     return ShardedGraphIndex(
         arrays=arrays, layout=layout, ref=np.asarray(gidx.ref, np.int8),
         tile_len=tile_len, tile_stride=gidx.tile_stride, n_tiles=n_tiles,

@@ -77,7 +77,8 @@ def test_linear_boundary_reads_map_identically(num_shards):
 
 
 @pytest.mark.parametrize("num_shards", [2, 3])
-def test_graph_boundary_reads_map_identically(num_shards):
+@pytest.mark.parametrize("prefilter", [True, False])
+def test_graph_boundary_reads_map_identically(num_shards, prefilter):
     ref = simulate.random_reference(L, seed=22)
     variants = simulate.simulate_variants(ref, n_snp=30, n_ins=15,
                                           n_del=15, seed=23)
@@ -90,10 +91,11 @@ def test_graph_boundary_reads_map_identically(num_shards):
 
     single = graph_mapper.map_batch_index(
         gidx, jnp.asarray(arr), jnp.asarray(lens), cfg=CFG,
-        max_candidates=4, backend="graph_lax", **KW, **SEED_KW)
+        max_candidates=4, backend="graph_lax", prefilter=prefilter,
+        **KW, **SEED_KW)
     sharded = shard.map_batch_sharded_graph(
         esi.index, arr, lens, cfg=CFG, shard_candidates=4,
-        backend="graph_lax", **KW)
+        backend="graph_lax", prefilter=prefilter, **KW)
 
     assert (np.asarray(single.position) == sharded.position).all()
     assert (np.asarray(single.distance) == sharded.distance).all()

@@ -9,6 +9,12 @@ because that is the regime where the workload axis matters: both
 workloads share the engine's admission queue, bucket ladder and executor
 cache, so the delta isolates the mapper itself.
 
+Each measured run is traced (`repro.obs`): the per-workload summary
+carries the folded per-stage Amdahl ``attribution`` ledger — for the
+graph workload that splits prefilter / dc_filter / align, the measured
+form of the tile-screen win — and ``--trace-out base.json`` exports
+``base_linear.json`` / ``base_graph.json`` Perfetto traces.
+
     PYTHONPATH=src python benchmarks/graph_serve.py           # full
     PYTHONPATH=src python benchmarks/graph_serve.py --smoke   # CI-sized
 """
@@ -16,10 +22,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from repro.core import minimizer_index
 from repro.genomics import simulate
 from repro.graph import index as graph_index
+from repro.obs import Tracer, build_ledger, render_report
 from repro.serve import EngineConfig, Metrics, ResultCache, ServeEngine, \
     poisson_load
 
@@ -30,12 +38,15 @@ except ImportError:  # script-style: python benchmarks/graph_serve.py
 
 
 def run_workload(workload, index, reads, *, buckets, max_batch, rate_rps,
-                 filter_k, warmup_reads, seed, prefilter=True):
+                 filter_k, warmup_reads, seed, prefilter=True,
+                 trace_out=None):
     cfg = EngineConfig(buckets=buckets, max_batch=max_batch,
                        max_delay_s=0.005, workload=workload,
                        filter_k=filter_k, minimizer_w=8, minimizer_k=12,
                        graph_prefilter=prefilter)
-    engine = ServeEngine(index, cfg)
+    tracer = Tracer()
+    tracer.enabled = False  # compile-time flushes stay out of the ledger
+    engine = ServeEngine(index, cfg, tracer=tracer)
     # compile off-clock: the warmup set AND the measured reads, so every
     # (read-length, tile-count) ladder rung the measured run hits is
     # already traced (the result cache is reset below, so the measured
@@ -43,6 +54,7 @@ def run_workload(workload, index, reads, *, buckets, max_batch, rate_rps,
     engine.map_all(warmup_reads + reads)
     engine.metrics = Metrics()  # measured run starts from clean instruments
     engine.cache = ResultCache(cfg.cache_capacity)
+    tracer.enabled = True
     rep = poisson_load(engine, reads, rate_rps=rate_rps, seed=seed)
     mapped = sum(1 for _, r in rep.results if r.position >= 0)
     summary = {
@@ -67,6 +79,13 @@ def run_workload(workload, index, reads, *, buckets, max_batch, rate_rps,
         summary["zero_survivor_reads"] = int(
             counters.get("graph_reads_zero_survivor", 0))
     engine.close()
+    report = build_ledger(tracer.log).report()
+    summary["attribution"] = report.to_dict()
+    print(f"--- {workload} ---")
+    print(render_report(report))
+    if trace_out:
+        tracer.log.export_chrome(trace_out)
+        print(f"wrote {trace_out}")
     return summary
 
 
@@ -75,6 +94,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (small ref, low rate)")
     ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="Perfetto trace base path (suffixed _linear/"
+                         "_graph per workload)")
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (reads/s)")
     ap.add_argument("--no-prefilter", action="store_true",
@@ -107,7 +129,12 @@ def main(argv=None):
 
     out = {"ref_len": ref_len, "n_variants": len(variants), "rate_rps": rate}
     for workload, index in (("linear", lin_idx), ("graph", g_idx)):
-        s = run_workload(workload, index, list(rs.reads), **common)
+        trace_out = None
+        if args.trace_out:
+            base, ext = os.path.splitext(args.trace_out)
+            trace_out = f"{base}_{workload}{ext or '.json'}"
+        s = run_workload(workload, index, list(rs.reads),
+                         trace_out=trace_out, **common)
         out[workload] = s
         row(f"graph_serve_{workload}", 1e6 / max(s["reads_per_s"], 1e-9),
             f"reads_per_s={s['reads_per_s']};p50_ms={s['p50_ms']};"

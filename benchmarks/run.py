@@ -16,7 +16,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--smoke`` runs the CI-sized subset (align_dispatch + serve_engine +
 segram_e2e + graph_serve + shard_scaling) and ``--json PATH`` writes
-their summaries into one artifact:
+their summaries into one artifact; the serving modules also emit their
+per-stage Amdahl attribution (`repro.obs`) into the summary and, under
+``--smoke``, Perfetto traces (``trace_serve_engine.json``,
+``trace_graph_serve_{linear,graph}.json`` — CI uploads them):
 
     PYTHONPATH=src python benchmarks/run.py --smoke --json bench_summary.json
 """
@@ -76,8 +79,12 @@ def main(argv=None) -> None:
             # modules with an argv parameter parse CLI flags; hand them an
             # empty argv so the harness's own arguments don't reach argparse
             if "argv" in inspect.signature(mod.main).parameters:
-                out = mod.main(["--smoke"] if args.smoke and
-                               name in SMOKE_MODS else [])
+                sub = ["--smoke"] if args.smoke and name in SMOKE_MODS \
+                    else []
+                if args.smoke and name in ("serve_engine", "graph_serve"):
+                    # smoke artifacts: Perfetto traces next to the JSON
+                    sub += ["--trace-out", f"trace_{name}.json"]
+                out = mod.main(sub)
             else:
                 out = mod.main()
             if isinstance(out, dict):

@@ -7,17 +7,26 @@ every read padded to the single global cap (the old offline behaviour).
 Reports reads/s, p50/p99 latency, mean batch occupancy, padded-base
 waste, and cache hit rate per run — the EXPERIMENTS.md §Perf serve rows.
 
+A third, closed-loop pass runs the bucketed engine twice more — tracer
+off, then tracer on — to measure tracing overhead
+(``trace_overhead_frac``, the ISSUE's <3% budget) and to fold the traced
+spans into the per-stage Amdahl attribution ledger
+(``attribution`` in the JSON; `repro.obs.attrib`).  ``--trace-out``
+exports the traced pass as Perfetto/Chrome ``trace_event`` JSON.
+
     PYTHONPATH=src python benchmarks/serve_engine.py           # full mix
     PYTHONPATH=src python benchmarks/serve_engine.py --smoke   # CI-sized
-    ... --json serve_summary.json                              # artifact
+    ... --json serve_summary.json --trace-out trace.json       # artifacts
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 from repro.core import minimizer_index
 from repro.genomics import simulate
+from repro.obs import Tracer, build_ledger, render_report
 from repro.serve import EngineConfig, Metrics, ResultCache, ServeEngine, \
     poisson_load
 
@@ -69,11 +78,59 @@ def run_engine(index, reads, *, buckets, max_batch, max_delay_s, rate_rps,
     return summary
 
 
+def trace_and_attribute(index, reads, warmup, *, buckets, max_batch,
+                        filter_k, trace_out=None, reps: int = 8):
+    """Traced-vs-untraced closed-loop pass → overhead + Amdahl ledger.
+
+    Poisson runs are open-loop (rate-limited), so tracer overhead hides
+    in idle time there; back-to-back ``map_all`` exposes it.  One warmed
+    engine serves every rep (the tracer toggles via ``enabled``, exactly
+    the production on/off switch), and min-of-``reps`` per mode screens
+    out scheduler noise that would otherwise swamp a percent-level
+    comparison.
+    """
+    tracer = Tracer()
+    tracer.enabled = False  # warmup (compiles) stays out of the ledger
+    # a generous deadline keeps every flush full: the flush count (the
+    # dominant run-time term) is then deterministic across reps, which
+    # a 2 ms deadline on a busy box cannot guarantee
+    cfg = EngineConfig(buckets=buckets, max_batch=max_batch,
+                       max_delay_s=0.25, filter_k=filter_k,
+                       minimizer_w=8, minimizer_k=12, cache_capacity=0)
+    loop_reads = list(reads) * 2  # longer window → percent-level signal
+    t_off, t_on = [], []
+    with ServeEngine(index, cfg, tracer=tracer) as engine:
+        engine.map_all(warmup)  # compile off-clock
+        def one(traced: bool) -> None:
+            tracer.enabled = traced
+            t0 = time.perf_counter()
+            engine.map_all(loop_reads)
+            (t_on if traced else t_off).append(time.perf_counter() - t0)
+
+        for i in range(reps):  # ABBA ordering cancels slow drift between
+            for traced in ((False, True), (True, False))[i % 2]:  # modes
+                one(traced)
+    report = build_ledger(tracer.log).report()
+    print(render_report(report))
+    if trace_out:
+        tracer.log.export_chrome(trace_out)
+        print(f"wrote {trace_out}")
+    return {
+        "untraced_s": round(min(t_off), 4),
+        "traced_s": round(min(t_on), 4),
+        "trace_overhead_frac": round(
+            min(t_on) / max(min(t_off), 1e-9) - 1.0, 4),
+        "attribution": report.to_dict(),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (small ref, short ladder)")
     ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write Perfetto/Chrome trace JSON here")
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (reads/s)")
     ap.add_argument("--seed", type=int, default=0)
@@ -115,6 +172,16 @@ def main(argv=None):
     row("serve_engine_bucketing_win",
         0.0, f"padded_bases_per_read_reduction="
              f"{out['pad_waste_reduction']}x")
+
+    tr = trace_and_attribute(
+        index, reads, warmup, buckets=buckets, max_batch=max_batch,
+        filter_k=common["filter_k"], trace_out=args.trace_out)
+    out.update(tr)
+    att = tr["attribution"]
+    row("serve_engine_tracing", 0.0,
+        f"overhead_frac={tr['trace_overhead_frac']};"
+        f"coverage={att['coverage']};"
+        f"serial_fraction={att['serial_fraction']}")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -56,25 +56,32 @@ def _measure(*, ref_len, n_reads, read_len, p_cap, candidates, reps, seed):
     arr, lens = encode.batch_reads(list(rs.reads), p_cap)
     epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
 
-    def timed(fn):
+    def timed(fn, ex):
+        """Average batch time + per-stage seconds from ``ex.last_times``."""
         res = fn()  # compile + warm
+        stages: dict[str, float] = {}
         t0 = time.perf_counter()
         for _ in range(reps):
             res = fn()
+            for name, a, b, _attrs in getattr(ex, "last_times", ()):
+                stages[name] = stages.get(name, 0.0) + (b - a)
         dt = (time.perf_counter() - t0) / reps
-        return res, dt
+        return res, dt, {k: round(v / reps, 5) for k, v in stages.items()}
 
     out = {}
     for s in SHARD_COUNTS:
         if s == 1:
             jarr, jlens = jnp.asarray(arr), jnp.asarray(lens)
-            fit = jax.jit(lambda i, a, le: mapper.map_batch(
-                i, a, le, cfg=cfg, max_candidates=candidates,
-                minimizer_w=8, minimizer_k=12, backend="lax", **common))
+            # the serve path's two-stage executor (same math as a fused
+            # map_batch jit) so the 1-shard row reports its
+            # seed_filter/align split alongside the sharded rows'
+            ex = mapper.LinearMapExecutor(
+                cfg=cfg, max_candidates=candidates,
+                minimizer_w=8, minimizer_k=12, backend="lax", **common)
 
-            def call():
+            def call(ex=ex):
                 return jax.tree_util.tree_map(
-                    np.asarray, fit(epi.index, jarr, jlens))
+                    np.asarray, ex(epi.index, jarr, jlens))
         else:
             esi = shard.from_epoched(epi, s)
             ex = shard.ShardedMapExecutor(
@@ -86,13 +93,14 @@ def _measure(*, ref_len, n_reads, read_len, p_cap, candidates, reps, seed):
             def call(ex=ex, arrays=arrays):
                 return ex(arrays, arr, lens)
 
-        res, dt = timed(call)
+        res, dt, stages = timed(call, ex)
         out[str(s)] = {
             "reads_per_s": round(n_reads / dt, 2),
             "ms_per_batch": round(dt * 1e3, 2),
             "mapped": int((res.position >= 0).sum()),
             "spmd": bool(s > 1 and jax.device_count() >= s),
-        }
+            "stages": stages,  # avg s/batch: scatter strong-scales,
+        }                      # merge+align are the Amdahl floor
     return {
         "ref_len": ref_len, "n_reads": n_reads, "read_len": read_len,
         "p_cap": p_cap, "candidates": candidates, "reps": reps,

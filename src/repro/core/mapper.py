@@ -11,6 +11,7 @@ minimizer index replicated or sharded over ``"model"`` (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import NamedTuple
 
@@ -232,3 +233,82 @@ def map_read(index: ReferenceIndex, read: jnp.ndarray, read_len, **kw
     """Map one read (batch-of-one convenience wrapper)."""
     res = map_batch(index, read[None], jnp.asarray(read_len)[None], **kw)
     return jax.tree_util.tree_map(lambda x: x[0], res)
+
+
+class LinearMapExecutor:
+    """Two-stage compiled linear mapper: seed/filter stage + align stage.
+
+    Computes exactly what `map_batch` computes (same ops, same integer
+    math — PAF output is byte-identical), but jits the seed+filter and
+    align stages *separately* so the host can time each one: every call
+    records ``last_times`` — ``(stage, t_start, t_end, attrs)`` on the
+    monotonic clock, with a ``compile`` attr flagging calls that traced
+    — which the serve engine replays into its tracer (`repro.obs`,
+    DESIGN.md §12).  The stage boundary materializes one
+    `SeedFilterResult`, a per-flush cost measured at <1% of the stage
+    itself on the smoke benchmark.
+
+    ``trace_hook`` (if given) is called with ``("seed_filter",)`` /
+    ``("align",)`` at trace time, mirroring `GraphMapExecutor`'s stage
+    keys so retrace accounting is uniform across workloads.
+    """
+
+    def __init__(self, *, cfg: GenASMConfig = GenASMConfig(),
+                 p_cap: int = 256,
+                 filter_bits: int = 128,
+                 filter_k: int = 12,
+                 max_candidates: int = 4,
+                 minimizer_w: int = 10,
+                 minimizer_k: int = 15,
+                 backend: str | None = None,
+                 block_bt: int | None = None,
+                 trace_hook=None):
+        from repro import align as align_dispatch
+
+        t_cap = p_cap + cfg.w * 2
+        user_hook = trace_hook or (lambda key: None)
+        self._compiled: set = set()
+
+        def hook(key):
+            self._compiled.add(key)
+            user_hook(key)
+
+        def sf_fn(index, reads, lens):
+            hook(("seed_filter",))
+            return seed_and_filter_batch(
+                index, reads, lens.astype(jnp.int32), p_cap=p_cap,
+                t_cap=t_cap, filter_bits=filter_bits, filter_k=filter_k,
+                max_candidates=max_candidates, minimizer_w=minimizer_w,
+                minimizer_k=minimizer_k)
+
+        def align_fn(sf, lens):
+            hook(("align",))
+            res = align_dispatch.align_batch(
+                sf.text, sf.pattern, lens.astype(jnp.int32), sf.t_len,
+                cfg=cfg, backend=backend, p_cap=p_cap, block_bt=block_bt)
+            failed = res.failed | (~sf.prefilter_ok)
+            return MapResult(
+                position=jnp.where(failed, -1, sf.position).astype(jnp.int32),
+                distance=jnp.where(failed, -1, res.distance),
+                ops=res.ops, n_ops=res.n_ops, failed=failed)
+
+        self._sf = jax.jit(sf_fn)
+        self._align = jax.jit(align_fn)
+        self.last_times: list[tuple[str, float, float, dict]] = []
+
+    def __call__(self, index: ReferenceIndex, reads, read_lens) -> MapResult:
+        lens = jnp.asarray(read_lens)
+        before = set(self._compiled)
+        t0 = time.monotonic()
+        sf = self._sf(index, jnp.asarray(reads), lens)
+        jax.block_until_ready(sf)
+        t1 = time.monotonic()
+        res = self._align(sf, lens)
+        jax.block_until_ready(res)
+        t2 = time.monotonic()
+        new = self._compiled - before
+        self.last_times = [
+            ("seed_filter", t0, t1, {"compile": ("seed_filter",) in new}),
+            ("align", t1, t2, {"compile": ("align",) in new}),
+        ]
+        return res

@@ -40,6 +40,7 @@ stages are jitted internally and cached per geometry + rung.
 from __future__ import annotations
 
 import os
+import time
 from collections import OrderedDict
 from functools import partial
 from typing import NamedTuple
@@ -524,7 +525,14 @@ class GraphMapExecutor:
         self.tile_stride = tile_stride
         self.max_candidates = max_candidates
         self.prefilter = _env_prefilter(prefilter)
-        self._hook = trace_hook or (lambda key: None)
+        user_hook = trace_hook or (lambda key: None)
+        self._compiled: set = set()  # stage keys that have traced
+
+        def hook(key):
+            self._compiled.add(key)
+            user_hook(key)
+
+        self._hook = hook
         fbits = min(filter_bits, p_cap)
         self._pf_kw = dict(
             tile_stride=tile_stride, filter_bits=fbits, filter_k=filter_k,
@@ -553,6 +561,9 @@ class GraphMapExecutor:
 
         self._align = jax.jit(align_fn)
         self.last_stats: dict = {}
+        # (stage, t0, t1, attrs) monotonic windows from the last call —
+        # the serve engine replays them as child spans of its flush span
+        self.last_times: list[tuple[str, float, float, dict]] = []
 
     def _stage(self, n_cap: int):
         fn = self._stages.get(n_cap)
@@ -585,8 +596,11 @@ class GraphMapExecutor:
         lens = jnp.asarray(read_lens, jnp.int32)
         b = reads.shape[0]
         slots = b * self.max_candidates
+        c_pf = ("prefilter",) not in self._compiled
+        t0 = time.monotonic()
         pf = self._pf(garr, reads, lens)
-        n_keep = np.asarray(pf.n_keep)
+        n_keep = np.asarray(pf.n_keep)  # host sync ends the prefilter stage
+        t1 = time.monotonic()
         total = int(n_keep.sum())
         live = int(np.asarray(pf.n_live).sum())
         n_cap = tile_rung(total, slots)
@@ -594,10 +608,22 @@ class GraphMapExecutor:
             candidate_slots=slots, tiles_live=live, tiles_kept=total,
             tiles_pruned=live - total, dc_rows=n_cap, dc_rows_dense=slots,
             reads_zero_survivor=int((n_keep == 0).sum()))
+        self.last_times = [("prefilter", t0, t1, {"compile": c_pf})]
         if total == 0:
             return unmapped_result(b, cfg=self.cfg, p_cap=self.p_cap)
+        c_dc = (n_cap,) not in self._compiled
+        c_al = ("align",) not in self._compiled
+        t2 = time.monotonic()
         st = self._stage(n_cap)(garr, reads, lens, pf)
-        return self._align(st, reads, lens)
+        jax.block_until_ready(st)
+        t3 = time.monotonic()
+        res = self._align(st, reads, lens)
+        jax.block_until_ready(res)
+        t4 = time.monotonic()
+        self.last_times += [
+            ("dc_filter", t2, t3, {"compile": c_dc, "dc_rows": n_cap}),
+            ("align", t3, t4, {"compile": c_al})]
+        return res
 
 
 # bounded LRU over map_batch's statics: refresh()/sweep loops must not

@@ -18,6 +18,13 @@ variation-graph index and emits GAF (node path + CIGAR) through the
 (DESIGN.md §11): ``--num-shards N`` partitions the reference index
 across N devices (`repro.shard` scatter/merge), byte-identical output.
 
+The observability plane (DESIGN.md §12) attaches with two flags:
+``--trace-out trace.json`` traces every flush and writes a
+Perfetto/Chrome ``trace_event`` file plus the per-stage Amdahl
+attribution table on exit; ``--http-port N`` serves ``/metrics``,
+``/healthz``, ``/trace``, and ``/attrib`` from a daemon thread while
+the run is live (port 0 = ephemeral).
+
 On a pod this runs one process per host with reads sharded by
 process_index.
 """
@@ -153,6 +160,13 @@ def main(argv=None):
                     help="length-bucket ladder of pattern caps")
     ap.add_argument("--max-delay-ms", type=float, default=5.0,
                     help="micro-batch flush deadline")
+    ap.add_argument("--trace-out", default=None,
+                    help="trace every flush and write Perfetto/Chrome "
+                         "trace_event JSON here (plus the per-stage "
+                         "Amdahl table on exit)")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve /metrics /healthz /trace /attrib on this "
+                         "port while running (0 = ephemeral)")
     args = ap.parse_args(argv)
 
     prof = simulate.PROFILES[args.profile]
@@ -202,7 +216,21 @@ def main(argv=None):
     pi, pc = jax.process_index(), jax.process_count()
     shard_ids = np.arange(pi, args.reads, pc)  # this host's disjoint slice
 
-    with ServeEngine(epi, cfg) as engine:
+    tracer = None
+    if args.trace_out or args.http_port is not None:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
+
+    obs_server = None
+    with ServeEngine(epi, cfg, tracer=tracer) as engine:
+        if args.http_port is not None:
+            from repro.obs.http import ObsServer
+
+            obs_server = ObsServer(metrics=engine.metrics, tracer=tracer,
+                                   port=args.http_port)
+            print(f"obs endpoints at {obs_server.url} "
+                  f"(/metrics /healthz /trace /attrib)")
         print(f"align backend: {engine.align_backend}")
         t0 = time.time()
         if args.online:
@@ -217,6 +245,15 @@ def main(argv=None):
         dt = time.time() - t0
         m = engine.metrics.snapshot()
         hit_rate = engine.cache.hit_rate
+    if obs_server is not None:
+        obs_server.close()
+    if tracer is not None:
+        from repro.obs import build_ledger, render_report
+
+        print(render_report(build_ledger(tracer.log).report()))
+        if args.trace_out:
+            tracer.log.export_chrome(args.trace_out)
+            print(f"wrote {args.trace_out}")
 
     mapped = len(rows)
     correct = sum(

@@ -1,0 +1,32 @@
+"""repro.obs — dependency-free tracing, attribution, and exposition.
+
+The dissertation's method is *characterize, then co-design*: every
+accelerator decision in the source papers starts from a per-phase
+breakdown of where wall time goes.  This package produces ours
+automatically on every serving and benchmark run (DESIGN.md §12):
+
+* `trace` — thread-safe monotonic-clock `Span`/`Tracer` with parent
+  links and per-span attributes, a ring-buffer `TraceLog`, Chrome/
+  Perfetto ``trace_event`` JSON export, and a structured JSONL sink.
+* `attrib` — folds finished spans into a per-stage wall-time ledger
+  (enqueue-wait → seed/filter → graph prefilter → DC filter → shard
+  scatter → host merge → align → emit) and renders the Amdahl report:
+  serial fraction, per-stage p50/p99, projected speedup from sharding
+  each stage.
+* `http` — stdlib exposition endpoint serving ``/metrics`` (the
+  engine's `Metrics.render()`), ``/healthz``, ``/trace`` (last-N
+  spans), and ``/attrib`` (the live Amdahl report).
+
+Stdlib-only by design: it must import (and stay cheap) in every
+environment the serving path runs in, kernels or not.
+"""
+from .attrib import (AttributionReport, StageLedger, build_ledger,
+                     render_report)
+from .http import ObsServer
+from .trace import NULL_TRACER, Span, StageTimer, TraceLog, Tracer
+
+__all__ = [
+    "Span", "Tracer", "TraceLog", "StageTimer", "NULL_TRACER",
+    "StageLedger", "AttributionReport", "build_ledger", "render_report",
+    "ObsServer",
+]

@@ -1,0 +1,111 @@
+"""Stdlib HTTP exposition: /metrics, /healthz, /trace, /attrib.
+
+`ObsServer` runs a ``ThreadingHTTPServer`` on a daemon thread and serves
+the observability plane of one serving process:
+
+* ``GET /metrics``  — the engine's ``Metrics.render()`` text page
+  (Prometheus-style ``name value`` lines).
+* ``GET /healthz``  — liveness probe, always ``200 ok`` while the
+  thread is up (a k8s-style readiness hook point).
+* ``GET /trace``    — the last-N finished spans as JSON
+  (``?n=500`` caps the tail; default 256).
+* ``GET /attrib``   — the live per-stage Amdahl report folded from the
+  tracer's ring buffer (`repro.obs.attrib`).
+
+Construct with ``port=0`` for an ephemeral port (tests); ``.port``
+reports the bound port either way.  ``close()`` shuts the thread down.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+from .attrib import build_ledger
+from .trace import Tracer
+
+
+class ObsServer:
+    """Daemon-thread HTTP endpoint over a `Metrics` registry + `Tracer`."""
+
+    def __init__(self, *, metrics=None, tracer: Tracer | None = None,
+                 host: str = "127.0.0.1", port: int = 0) -> None:
+        obs = self
+
+        class Handler(BaseHTTPRequestHandler):
+            """Routes the four GET endpoints over the enclosing ObsServer."""
+
+            def log_message(self, *args):
+                """Silence the default per-request stderr logging."""
+
+            def _send(self, code: int, body: str,
+                      ctype: str = "text/plain; charset=utf-8") -> None:
+                data = body.encode()
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+
+            def do_GET(self):  # noqa: N802 — BaseHTTPRequestHandler API
+                """Serve /healthz, /metrics, /trace, /attrib (404 else)."""
+                url = urlparse(self.path)
+                try:
+                    if url.path == "/healthz":
+                        self._send(200, "ok\n")
+                    elif url.path == "/metrics":
+                        if obs.metrics is None:
+                            self._send(404, "no metrics registry attached\n")
+                        else:
+                            self._send(200, obs.metrics.render())
+                    elif url.path == "/trace":
+                        if obs.tracer is None:
+                            self._send(404, "no tracer attached\n")
+                        else:
+                            q = parse_qs(url.query)
+                            n = int(q.get("n", ["256"])[0])
+                            self._send(
+                                200,
+                                json.dumps({"spans": obs.tracer.log.last(n),
+                                            "dropped": obs.tracer.log.dropped
+                                            }),
+                                "application/json")
+                    elif url.path == "/attrib":
+                        if obs.tracer is None:
+                            self._send(404, "no tracer attached\n")
+                        else:
+                            rep = build_ledger(obs.tracer.log).report()
+                            self._send(200, json.dumps(rep.to_dict()),
+                                       "application/json")
+                    else:
+                        self._send(404, "unknown path; try /metrics, "
+                                        "/healthz, /trace, /attrib\n")
+                except BrokenPipeError:  # client went away mid-write
+                    pass
+
+        self.metrics = metrics
+        self.tracer = tracer
+        self._srv = ThreadingHTTPServer((host, port), Handler)
+        self._srv.daemon_threads = True
+        self.host, self.port = self._srv.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._srv.serve_forever, name="obs-http", daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        """Base URL of the bound endpoint (ephemeral port resolved)."""
+        return f"http://{self.host}:{self.port}"
+
+    def close(self) -> None:
+        """Stop serving and join the endpoint thread (idempotent)."""
+        self._srv.shutdown()
+        self._srv.server_close()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

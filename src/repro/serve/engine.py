@@ -42,13 +42,13 @@ from dataclasses import dataclass, field
 from functools import partial
 from typing import NamedTuple, Sequence
 
-import jax
 import numpy as np
 
 from repro.core import mapper
 from repro.core.genasm import GenASMConfig
 from repro.core.minimizer_index import EpochedIndex, ReferenceIndex
 from repro.genomics import encode
+from repro.obs.trace import NULL_TRACER, Tracer
 
 from .cache import ResultCache, read_digest
 from .metrics import Metrics
@@ -166,8 +166,12 @@ class ServeEngine:
 
     def __init__(self, index,
                  config: EngineConfig = EngineConfig(),
-                 metrics: Metrics | None = None):
+                 metrics: Metrics | None = None,
+                 tracer: Tracer | None = None):
         self.config = config
+        # NULL_TRACER's span()/add()/event() are near-free no-ops, so the
+        # untraced hot path stays untaxed (ISSUE: <3% overhead traced)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
         def check_minimizer(kw):
             if (kw["w"], kw["k"]) != (config.minimizer_w, config.minimizer_k):
@@ -341,6 +345,9 @@ class ServeEngine:
             self.metrics.gauge("queue_depth").set(
                 sum(len(q) for q in self._queues.values()))
             self._cv.notify_all()  # the worker may not be the FIFO waiter
+        if self.tracer.enabled:
+            self.tracer.event("submit", bucket=req.bucket,
+                              length=req.length)
         return fut
 
     def map_all(self, reads: Sequence[np.ndarray]) -> list[ServeResult]:
@@ -394,9 +401,10 @@ class ServeEngine:
     def _count_trace(self, cap: int, stage=None) -> None:
         """Executor-body hook: runs at trace time only → counts retraces.
 
-        Linear executors count per bucket cap; graph executors pass a
-        stage key (``("prefilter",)``, ``(n_cap,)`` per tile-count rung,
-        ``("align",)``), counted as ``(cap, *stage)`` — the engine's
+        Every executor passes a stage key — linear ``("seed_filter",)``
+        / ``("align",)``, sharded ``("scatter",)`` / ``("align",)``,
+        graph ``("prefilter",)``, ``(n_cap,)`` per tile-count rung, and
+        ``("align",)`` — counted as ``(cap, *stage)``, so the engine's
         (read-length rung, tile-count rung) bucket ladder is assertable
         as one trace per pair."""
         key = cap if stage is None else (cap,) + tuple(stage)
@@ -461,16 +469,15 @@ class ServeEngine:
                     backend=backend, prefilter=c.graph_prefilter,
                     trace_hook=partial(self._count_trace, cap))
             else:
-                def run(index, arr, lens, _cap=cap):
-                    self._count_trace(_cap)
-                    return mapper.map_batch(
-                        index, arr, lens, cfg=c.genasm, p_cap=_cap,
-                        filter_bits=fbits, filter_k=c.filter_k,
-                        max_candidates=c.max_candidates,
-                        minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
-                        backend=backend)
-
-                fn = jax.jit(run)
+                # host-orchestrated two-stage executor: same math as one
+                # fused map_batch jit, but the seed_filter/align boundary
+                # is observable (last_times) for per-stage attribution
+                fn = mapper.LinearMapExecutor(
+                    cfg=c.genasm, p_cap=cap, filter_bits=fbits,
+                    filter_k=c.filter_k, max_candidates=c.max_candidates,
+                    minimizer_w=c.minimizer_w, minimizer_k=c.minimizer_k,
+                    backend=backend,
+                    trace_hook=partial(self._count_trace, cap))
             self._executors[key] = fn
         return fn
 
@@ -547,56 +554,77 @@ class ServeEngine:
 
     def _execute(self, cap: int, reqs: list[_Request]) -> None:
         c = self.config
-        index, epoch = self.index.current()
-        if c.num_shards > 1:
-            payload = index.arrays
-            fn = self._executor(cap, index.layout_key, sharded_index=index)
-        elif c.workload == "graph":
-            payload = index.arrays
-            fn = self._executor(cap, index.tile_stride)
-        else:
-            payload = index
-            fn = self._executor(cap)
-        arr, lens = encode.batch_reads(
-            [r.read for r in reqs]
-            + [np.zeros(0, np.int8)] * (c.max_batch - len(reqs)), cap)
-        res = fn(payload, arr, lens)
-        pos = np.asarray(res.position)
-        dist = np.asarray(res.distance)
-        ops = np.asarray(res.ops)
-        n_ops = np.asarray(res.n_ops)
-        paths = (np.asarray(res.path) if c.workload == "graph" else None)
+        tr = self.tracer
+        t_flush = time.monotonic()
+        with tr.span("flush", bucket_cap=cap, batch=len(reqs),
+                     workload=c.workload, shards=c.num_shards):
+            if tr.enabled:
+                # queue waits overlap the previous flush's compute, so
+                # they export as async spans (outside the slice nesting)
+                for r in reqs:
+                    tr.add("enqueue_wait", r.t_submit, t_flush,
+                           bucket_cap=cap, async_=True)
+            index, epoch = self.index.current()
+            if c.num_shards > 1:
+                payload = index.arrays
+                fn = self._executor(cap, index.layout_key,
+                                    sharded_index=index)
+            elif c.workload == "graph":
+                payload = index.arrays
+                fn = self._executor(cap, index.tile_stride)
+            else:
+                payload = index
+                fn = self._executor(cap)
+            with tr.span("encode", bucket_cap=cap):
+                arr, lens = encode.batch_reads(
+                    [r.read for r in reqs]
+                    + [np.zeros(0, np.int8)] * (c.max_batch - len(reqs)),
+                    cap)
+            res = fn(payload, arr, lens)
+            # replay the executor's per-stage monotonic windows as child
+            # spans of this flush (seed_filter/prefilter/dc_filter/
+            # scatter/merge/align, with compile/dc_rows/shard attrs)
+            for name, t0, t1, attrs in getattr(fn, "last_times", ()):
+                tr.add(name, t0, t1, bucket_cap=cap, **attrs)
+            pos = np.asarray(res.position)
+            dist = np.asarray(res.distance)
+            ops = np.asarray(res.ops)
+            n_ops = np.asarray(res.n_ops)
+            paths = (np.asarray(res.path) if c.workload == "graph"
+                     else None)
 
-        m = self.metrics
-        m.counter("batches_flushed").inc()
-        m.counter(f"batches_flushed_cap{cap}").inc()
-        m.histogram("batch_occupancy", lo=1e-3, hi=1.0).observe(
-            len(reqs) / c.max_batch)
-        real = int(sum(min(r.length, cap) for r in reqs))
-        m.counter("bases_useful").inc(real)
-        m.counter("bases_padded_read").inc(len(reqs) * cap - real)
-        m.counter("bases_padded_slot").inc((c.max_batch - len(reqs)) * cap)
-        stats = getattr(fn, "last_stats", None)
-        if stats:  # graph executors: tile-screen / DC-occupancy counters
-            for name, v in stats.items():
-                m.counter(f"graph_{name}").inc(int(v))
+            m = self.metrics
+            m.counter("batches_flushed").inc()
+            m.counter(f"batches_flushed_cap{cap}").inc()
+            m.histogram("batch_occupancy", lo=1e-3, hi=1.0).observe(
+                len(reqs) / c.max_batch)
+            real = int(sum(min(r.length, cap) for r in reqs))
+            m.counter("bases_useful").inc(real)
+            m.counter("bases_padded_read").inc(len(reqs) * cap - real)
+            m.counter("bases_padded_slot").inc(
+                (c.max_batch - len(reqs)) * cap)
+            stats = getattr(fn, "last_stats", None)
+            if stats:  # graph executors: tile-screen / DC-occupancy
+                for name, v in stats.items():
+                    m.counter(f"graph_{name}").inc(int(v))
 
-        done = time.monotonic()
-        results = []
-        for i, r in enumerate(reqs):
-            out = ServeResult(
-                position=int(pos[i]), distance=int(dist[i]),
-                ops=ops[i].copy(), n_ops=int(n_ops[i]),
-                read_len=int(lens[i]), bucket_cap=cap, cached=False,
-                latency_s=done - r.t_submit,
-                path=None if paths is None else paths[i].copy())
-            self.cache.put(r.read, epoch, out, digest=r.digest)
-            m.histogram("latency_s").observe(out.latency_s)
-            results.append(out)
-        # resolve futures before releasing drain(): a drained engine has
-        # every result observable, not merely computed
-        for r, out in zip(reqs, results):
-            r.future.set_result(out)
+            with tr.span("emit", bucket_cap=cap):
+                done = time.monotonic()
+                results = []
+                for i, r in enumerate(reqs):
+                    out = ServeResult(
+                        position=int(pos[i]), distance=int(dist[i]),
+                        ops=ops[i].copy(), n_ops=int(n_ops[i]),
+                        read_len=int(lens[i]), bucket_cap=cap,
+                        cached=False, latency_s=done - r.t_submit,
+                        path=None if paths is None else paths[i].copy())
+                    self.cache.put(r.read, epoch, out, digest=r.digest)
+                    m.histogram("latency_s").observe(out.latency_s)
+                    results.append(out)
+                # resolve futures before releasing drain(): a drained
+                # engine has every result observable, not merely computed
+                for r, out in zip(reqs, results):
+                    r.future.set_result(out)
         with self._cv:
             self._inflight -= len(reqs)
             self._cv.notify_all()

@@ -18,7 +18,7 @@ result without any DC/align work).
 """
 from __future__ import annotations
 
-import math
+import bisect
 import threading
 
 
@@ -35,7 +35,8 @@ class Counter:
 
     @property
     def value(self) -> float:
-        return self._v
+        with self._lock:
+            return self._v
 
 
 class Gauge:
@@ -43,13 +44,17 @@ class Gauge:
 
     def __init__(self) -> None:
         self._v = 0.0
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self._v = float(v)
+        v = float(v)
+        with self._lock:
+            self._v = v
 
     @property
     def value(self) -> float:
-        return self._v
+        with self._lock:
+            return self._v
 
 
 class Histogram:
@@ -75,34 +80,48 @@ class Histogram:
 
     def observe(self, v: float) -> None:
         x = min(max(float(v), self._lo), self._hi)
-        # first bucket whose upper bound holds x (bounds are sorted)
-        j = min(
-            int(math.log(x / self._lo) / math.log(self._hi / self._lo)
-                * (len(self._bounds) - 1) + 0.9999),
-            len(self._bounds) - 1,
-        )
+        # first bucket whose upper bound holds x: bucket j covers
+        # (bounds[j-1], bounds[j]], so an observation landing exactly on
+        # a bound belongs to that bound's bucket — bisect_left is exact
+        # where the old log-space arithmetic could round across the edge
+        j = min(bisect.bisect_left(self._bounds, x), len(self._bounds) - 1)
         with self._lock:
             self._counts[j] += 1
             self.count += 1
             self.sum += float(v)
 
+    def _quantile_locked(self, q: float) -> float:
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        seen = 0
+        for j, c in enumerate(self._counts):
+            if c and seen + c >= target:
+                lo = self._bounds[j - 1] if j else self._lo
+                frac = (target - seen) / c
+                return lo + frac * (self._bounds[j] - lo)
+            seen += c
+        return self._bounds[-1]
+
     def quantile(self, q: float) -> float:
         with self._lock:
-            if self.count == 0:
-                return 0.0
-            target = q * self.count
-            seen = 0
-            for j, c in enumerate(self._counts):
-                if c and seen + c >= target:
-                    lo = self._bounds[j - 1] if j else self._lo
-                    frac = (target - seen) / c
-                    return lo + frac * (self._bounds[j] - lo)
-                seen += c
-            return self._bounds[-1]
+            return self._quantile_locked(q)
+
+    def stats(self) -> dict:
+        """count/sum/mean/p50/p99 read under one lock acquisition —
+        a torn read of (count, sum) mid-``observe`` cannot happen."""
+        with self._lock:
+            count, total = self.count, self.sum
+            p50 = self._quantile_locked(0.50)
+            p99 = self._quantile_locked(0.99)
+        return {"count": count, "sum": total,
+                "mean": total / count if count else 0.0,
+                "p50": p50, "p99": p99}
 
     @property
     def mean(self) -> float:
-        return self.sum / self.count if self.count else 0.0
+        with self._lock:
+            return self.sum / self.count if self.count else 0.0
 
 
 class Metrics:
@@ -140,10 +159,11 @@ class Metrics:
         for n, g in gauges.items():
             out[n] = g.value
         for n, h in hists.items():
-            out[f"{n}_count"] = h.count
-            out[f"{n}_mean"] = h.mean
-            out[f"{n}_p50"] = h.quantile(0.50)
-            out[f"{n}_p99"] = h.quantile(0.99)
+            st = h.stats()  # count/sum/quantiles under the histogram's lock
+            out[f"{n}_count"] = st["count"]
+            out[f"{n}_mean"] = st["mean"]
+            out[f"{n}_p50"] = st["p50"]
+            out[f"{n}_p99"] = st["p99"]
         return out
 
     def render(self) -> str:

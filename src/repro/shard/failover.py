@@ -53,6 +53,7 @@ def map_batch_with_failover(
     lease_s: float = 60.0,
     max_attempts: int = 3,
     fault_hook=None,
+    tracer=None,
 ) -> MapResult:
     """Map a batch with per-shard retry semantics over a lease queue.
 
@@ -61,7 +62,15 @@ def map_batch_with_failover(
     deterministic, so a re-materialized shard contributes identical
     candidates and the merged output is unchanged by failures.  Raises
     ``RuntimeError`` only after a shard fails ``max_attempts`` times.
+
+    ``tracer`` (a `repro.obs.trace.Tracer`) records one ``scatter`` span
+    per shard attempt (attrs: ``shard``, ``attempt``), a
+    ``shard_requeued`` instant per lease failure, and the ``merge`` /
+    ``align`` tail spans — the flight recorder for chaos drills.
     """
+    from repro.obs.trace import NULL_TRACER
+
+    tr = tracer if tracer is not None else NULL_TRACER
     sharded, _ = esi.current()
     s = sharded.num_shards
     # shared keyed cache (mapper.get_executor): repeated degraded-mode
@@ -82,12 +91,13 @@ def map_batch_with_failover(
             continue
         attempts[item] += 1
         try:
-            if fault_hook is not None:
-                fault_hook(item, attempts[item])
-            cur, _ = esi.current()
-            st = ex.stage(_row(cur.arrays, item), reads, read_lens)
-            parts[item] = jax.tree_util.tree_map(
-                lambda x: np.asarray(x)[0], st)
+            with tr.span("scatter", shard=item, attempt=attempts[item]):
+                if fault_hook is not None:
+                    fault_hook(item, attempts[item])
+                cur, _ = esi.current()
+                st = ex.stage(_row(cur.arrays, item), reads, read_lens)
+                parts[item] = jax.tree_util.tree_map(
+                    lambda x: np.asarray(x)[0], st)
         except Exception as e:
             if attempts[item] >= max_attempts:
                 raise RuntimeError(
@@ -95,14 +105,20 @@ def map_batch_with_failover(
                     f"error: {e}") from e
             esi.refresh_shard(item)  # re-materialize before the retry
             q.fail(item)
+            tr.event("shard_requeued", shard=item, attempt=attempts[item],
+                     error=type(e).__name__)
             continue
         q.complete(item)
 
-    stacked = ShardStageResult(*[
-        jnp.asarray(np.stack([parts[i][f] for i in range(s)]))
-        for f in range(len(ShardStageResult._fields))])
-    fd, pos, text, t_len, _ = ex.merge(stacked)
-    res = ex._align(jnp.asarray(text), jnp.asarray(reads),
-                    jnp.asarray(read_lens, jnp.int32), jnp.asarray(t_len),
-                    jnp.asarray(pos), jnp.asarray(fd))
-    return jax.tree_util.tree_map(np.asarray, res)
+    with tr.span("merge", shards=s):
+        stacked = ShardStageResult(*[
+            jnp.asarray(np.stack([parts[i][f] for i in range(s)]))
+            for f in range(len(ShardStageResult._fields))])
+        fd, pos, text, t_len, _ = ex.merge(stacked)
+    with tr.span("align"):
+        res = ex._align(jnp.asarray(text), jnp.asarray(reads),
+                        jnp.asarray(read_lens, jnp.int32),
+                        jnp.asarray(t_len), jnp.asarray(pos),
+                        jnp.asarray(fd))
+        res = jax.tree_util.tree_map(np.asarray, res)
+    return res

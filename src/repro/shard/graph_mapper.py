@@ -17,6 +17,7 @@ with their packed window bytes *and* per-node backbone coordinates
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from functools import partial
 
@@ -113,7 +114,10 @@ class ShardedGraphMapExecutor:
         self.prefilter = _env_prefilter(prefilter)
         t_cap = p_cap + 2 * cfg.w
 
+        self._compiled: set = set()  # stage keys that have traced
+
         def hook(key):
+            self._compiled.add(key)
             if trace_hook is None:
                 return
             try:
@@ -206,6 +210,9 @@ class ShardedGraphMapExecutor:
 
         self._align = jax.jit(align_stage)
         self.last_stats: dict = {}
+        # (stage, t0, t1, attrs) monotonic windows from the last call —
+        # the serve engine replays them as child spans of its flush span
+        self.last_times: list[tuple[str, float, float, dict]] = []
 
     def _stage_for(self, n_cap: int):
         fn = self._stages.get(n_cap)
@@ -243,8 +250,11 @@ class ShardedGraphMapExecutor:
         lens = jnp.asarray(read_lens, jnp.int32)
         b = int(reads.shape[0])
         slots = b * self.shard_candidates
+        c_pf = ("prefilter",) not in self._compiled
+        t0 = time.monotonic()
         pf = self._pf(*arrays, reads, lens)  # leaves [S, B, ...]
-        n_keep = np.asarray(pf.n_keep)  # [S, B]
+        n_keep = np.asarray(pf.n_keep)  # [S, B]; host sync ends prefilter
+        t1 = time.monotonic()
         kept = int(n_keep.sum())
         live = int(np.asarray(pf.n_live).sum())
         # one rung for all shards: the worst shard's survivor count
@@ -255,14 +265,29 @@ class ShardedGraphMapExecutor:
             dc_rows=self.num_shards * n_cap,
             dc_rows_dense=self.num_shards * slots,
             reads_zero_survivor=int((n_keep.sum(axis=0) == 0).sum()))
+        self.last_times = [("prefilter", t0, t1, {"compile": c_pf,
+                                                  "shards": self.num_shards})]
         if n_cap == 0:
             return jax.tree_util.tree_map(
                 np.asarray, unmapped_result(b, cfg=self.cfg,
                                             p_cap=self.p_cap))
+        c_dc = (n_cap,) not in self._compiled
+        c_al = ("align",) not in self._compiled
+        t2 = time.monotonic()
         st = self._stage_for(n_cap)(*arrays, reads, lens, pf)
+        jax.block_until_ready(st)
+        t3 = time.monotonic()
         merged = self.merge(st)
+        t4 = time.monotonic()
         res = self._align(jax.tree.map(jnp.asarray, merged), reads, lens)
-        return jax.tree_util.tree_map(np.asarray, res)
+        res = jax.tree_util.tree_map(np.asarray, res)
+        t5 = time.monotonic()
+        self.last_times += [
+            ("dc_filter", t2, t3,
+             {"compile": c_dc, "dc_rows": self.num_shards * n_cap}),
+            ("merge", t3, t4, {}),
+            ("align", t4, t5, {"compile": c_al})]
+        return res
 
 
 # bounded LRU, mirroring shard.mapper: refresh() cycles must not leak

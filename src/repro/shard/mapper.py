@@ -38,6 +38,7 @@ requirement.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from functools import partial
 from typing import NamedTuple
@@ -138,6 +139,18 @@ class ShardedMapExecutor:
         self.num_shards = sharded.num_shards
         self.filter_k = filter_k
         self.backend = backend
+        user_hook = trace_hook
+        self._compiled: set = set()  # stage keys that have traced
+
+        def hook(key):
+            self._compiled.add(key)
+            if user_hook is None:
+                return
+            try:
+                user_hook(key)
+            except TypeError:  # legacy no-arg hooks
+                user_hook()
+
         stage = partial(
             _stage_one_shard,
             ref_len=sharded.ref_len, p_cap=p_cap, t_cap=t_cap,
@@ -159,6 +172,7 @@ class ShardedMapExecutor:
                 sharded.arrays, mesh))
 
             def block_stage(refs, offs, hashes, poss, reads, lens):
+                hook(("scatter",))
                 out = stage(refs[0], offs[0], hashes[0], poss[0], reads, lens)
                 return jax.tree.map(lambda x: x[None], out)
 
@@ -168,6 +182,7 @@ class ShardedMapExecutor:
                 out_specs=P("shard")))
         else:
             def stacked_stage(refs, offs, hashes, poss, reads, lens):
+                hook(("scatter",))
                 return jax.vmap(
                     lambda r, o, h, p: stage(r, o, h, p, reads, lens)
                 )(refs, offs, hashes, poss)
@@ -175,8 +190,7 @@ class ShardedMapExecutor:
             self._stage = jax.jit(stacked_stage)
 
         def align_stage(text, reads, lens, t_len, pos, fd):
-            if trace_hook is not None:
-                trace_hook()
+            hook(("align",))
             from repro import align as align_dispatch
 
             lens = lens.astype(jnp.int32)
@@ -193,6 +207,9 @@ class ShardedMapExecutor:
                 ops=res.ops, n_ops=res.n_ops, failed=failed)
 
         self._align = jax.jit(align_stage)
+        # (stage, t0, t1, attrs) monotonic windows from the last call —
+        # the serve engine replays them as child spans of its flush span
+        self.last_times: list[tuple[str, float, float, dict]] = []
 
     def stage(self, arrays: ShardArrays, reads, read_lens
               ) -> ShardStageResult:
@@ -223,13 +240,26 @@ class ShardedMapExecutor:
 
     def __call__(self, arrays: ShardArrays, reads, read_lens) -> MapResult:
         """Map one batch: scatter → merge → single batched align call."""
+        c_sc = ("scatter",) not in self._compiled
+        c_al = ("align",) not in self._compiled
+        t0 = time.monotonic()
         st = self.stage(arrays, reads, read_lens)
+        jax.block_until_ready(st)
+        t1 = time.monotonic()
         fd, pos, text, t_len, _ = self.merge(st)
+        t2 = time.monotonic()
         res = self._align(jnp.asarray(text), jnp.asarray(reads),
                           jnp.asarray(read_lens, jnp.int32),
                           jnp.asarray(t_len), jnp.asarray(pos),
                           jnp.asarray(fd))
-        return jax.tree_util.tree_map(np.asarray, res)
+        res = jax.tree_util.tree_map(np.asarray, res)
+        t3 = time.monotonic()
+        self.last_times = [
+            ("scatter", t0, t1,
+             {"compile": c_sc, "shards": self.num_shards}),
+            ("merge", t1, t2, {}),
+            ("align", t2, t3, {"compile": c_al})]
+        return res
 
 
 # bounded LRU: a long-running process whose refresh() cycles through

@@ -1,0 +1,259 @@
+"""repro.obs: spans, Perfetto export, Amdahl ledger, HTTP exposition."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.obs import (NULL_TRACER, ObsServer, Span, TraceLog, Tracer,
+                       build_ledger, render_report)
+from repro.obs.attrib import PARALLEL_STAGES, STAGE_ORDER
+from repro.serve.metrics import Histogram, Metrics
+
+
+# ----------------------------------------------------------------- tracer --
+def test_span_nesting_parent_links():
+    tr = Tracer()
+    with tr.span("flush") as f:
+        with tr.span("seed_filter") as a:
+            pass
+        with tr.span("align") as b:
+            pass
+    spans = {s.name: s for s in tr.log.spans()}
+    assert spans["seed_filter"].parent_id == f.span_id
+    assert spans["align"].parent_id == f.span_id
+    assert spans["flush"].parent_id is None
+    assert a.span_id != b.span_id
+    # children close before (and inside) the parent window
+    assert f.t_start <= a.t_start <= a.t_end <= f.t_end
+
+
+def test_retroactive_add_parents_to_open_span():
+    tr = Tracer()
+    t0 = time.monotonic()
+    with tr.span("flush") as f:
+        tr.add("align", t0, t0 + 0.5, compile=True)
+    s = tr.log.spans()[0]
+    assert s.name == "align" and s.parent_id == f.span_id
+    assert s.duration_s == pytest.approx(0.5)
+    assert s.attrs == {"compile": True}
+
+
+def test_nesting_is_per_thread():
+    tr = Tracer()
+    seen = {}
+
+    def worker():
+        # no open span on THIS thread, even while main holds one
+        seen["parent"] = tr.current_parent()
+
+    with tr.span("flush"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen["parent"] is None
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("flush") as s:
+        s.set(bucket=1)  # inert null span — must not raise
+        tr.add("align", 0.0, 1.0)
+        tr.event("submit")
+    assert tr.log.spans() == []
+    assert NULL_TRACER.log.spans() == []
+
+
+def test_ring_buffer_drops_oldest():
+    log = TraceLog(max_spans=4)
+    for i in range(6):
+        log.append(Span(name=f"s{i}", t_start=0.0, t_end=1.0, span_id=i))
+    assert [s.name for s in log.spans()] == ["s2", "s3", "s4", "s5"]
+    assert log.dropped == 2
+    assert [d["name"] for d in log.last(2)] == ["s4", "s5"]
+
+
+# ---------------------------------------------------------------- perfetto --
+def test_chrome_export_is_valid_trace_event_json(tmp_path):
+    tr = Tracer()
+    t0 = time.monotonic()
+    with tr.span("flush", bucket_cap=128):
+        tr.add("enqueue_wait", t0 - 0.01, t0, async_=True)
+        tr.add("align", t0, t0 + 0.001)
+        tr.event("submit", length=100)
+    path = tmp_path / "trace.json"
+    tr.log.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+
+    events = doc["traceEvents"]
+    assert isinstance(events, list) and events
+    phases = {e["ph"] for e in events}
+    assert {"M", "X", "i", "b", "e"} <= phases
+    for e in events:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0 and e["ts"] >= 0.0
+    # async begin/end ids pair up exactly
+    b_ids = sorted(e["id"] for e in events if e["ph"] == "b")
+    e_ids = sorted(e["id"] for e in events if e["ph"] == "e")
+    assert b_ids == e_ids and len(b_ids) == 1
+    # thread-name metadata declares every tid used by real events
+    named = {e["tid"] for e in events if e["ph"] == "M"}
+    used = {e["tid"] for e in events if e["ph"] != "M"}
+    assert used <= named
+
+
+def test_jsonl_export_round_trips(tmp_path):
+    tr = Tracer()
+    with tr.span("flush", batch=3):
+        pass
+    path = tmp_path / "trace.jsonl"
+    tr.log.export_jsonl(str(path))
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(rows) == 1
+    assert rows[0]["name"] == "flush" and rows[0]["attrs"] == {"batch": 3}
+    assert rows[0]["duration_ms"] >= 0.0
+
+
+# ------------------------------------------------------------------ ledger --
+def _mk(name, t0, t1, span_id, parent=None, **attrs):
+    return Span(name=name, t_start=t0, t_end=t1, span_id=span_id,
+                parent_id=parent, attrs=attrs)
+
+
+def test_ledger_sums_to_flush_wall_time():
+    # flush [0, 1.0]: seed_filter 0.6 + align 0.3 attributed, 0.1 uncovered
+    spans = [
+        _mk("flush", 0.0, 1.0, 1),
+        _mk("seed_filter", 0.0, 0.6, 2, parent=1),
+        _mk("align", 0.6, 0.9, 3, parent=1),
+    ]
+    led = build_ledger(spans)
+    rep = led.report()
+    assert rep.n_flushes == 1
+    assert rep.flush_s == pytest.approx(1.0)
+    total = sum(r["total_s"] for r in rep.stages
+                if r["stage"] != "enqueue_wait")
+    assert total == pytest.approx(rep.flush_s)  # "other" absorbs the gap
+    assert led.total("other") == pytest.approx(0.1)
+    assert rep.coverage == pytest.approx(0.9)
+    # serial fraction = (align + other) / busy = 0.4 / 1.0
+    assert rep.serial_fraction == pytest.approx(0.4)
+
+
+def test_ledger_enqueue_wait_excluded_from_busy_and_coverage():
+    spans = [
+        _mk("flush", 0.0, 1.0, 1),
+        _mk("enqueue_wait", -5.0, 0.0, 2, parent=1),
+        _mk("align", 0.0, 1.0, 3, parent=1),
+    ]
+    rep = build_ledger(spans).report()
+    assert rep.busy_s == pytest.approx(1.0)  # the 5 s wait is not busy time
+    assert rep.coverage == pytest.approx(1.0)
+    eq = next(r for r in rep.stages if r["stage"] == "enqueue_wait")
+    assert eq["frac"] == 0.0  # a busy-fraction would be meaningless
+
+
+def test_ledger_amdahl_projection():
+    # one parallel stage at 50% of busy time: spd@2 = 1/(0.5 + 0.25)
+    spans = [
+        _mk("flush", 0.0, 1.0, 1),
+        _mk("scatter", 0.0, 0.5, 2, parent=1),
+        _mk("merge", 0.5, 1.0, 3, parent=1),
+    ]
+    rep = build_ledger(spans).report(shard_counts=(2,))
+    sc = next(r for r in rep.stages if r["stage"] == "scatter")
+    assert sc["parallel"]
+    assert sc["speedup_x2"] == pytest.approx(4 / 3, abs=1e-3)  # rows round
+    assert sc["speedup_inf"] == pytest.approx(2.0)
+    assert rep.serial_fraction == pytest.approx(0.5)
+    assert set(PARALLEL_STAGES) <= set(STAGE_ORDER)
+
+
+def test_render_report_is_one_row_per_stage():
+    spans = [_mk("flush", 0.0, 1.0, 1), _mk("align", 0.0, 1.0, 2, parent=1)]
+    text = render_report(build_ledger(spans).report())
+    lines = text.splitlines()
+    assert "stage attribution: 1 flushes" in lines[0]
+    assert any(line.startswith("align") for line in lines)
+    assert any(line.startswith("other") for line in lines)
+
+
+def test_ledger_unknown_stage_folds_into_other():
+    led = build_ledger([_mk("flush", 0.0, 1.0, 1),
+                        _mk("mystery", 0.0, 0.2, 2, parent=1)])
+    assert led.total("other") == pytest.approx(1.0)  # full flush uncovered
+
+
+# -------------------------------------------------------------------- http --
+def _get(url: str) -> tuple[int, str]:
+    with urllib.request.urlopen(url, timeout=5) as r:
+        return r.status, r.read().decode()
+
+
+def test_obs_server_endpoints_smoke():
+    metrics = Metrics()
+    metrics.counter("reads_total").inc(7)
+    tr = Tracer()
+    with tr.span("flush"):
+        with tr.span("align"):
+            pass
+    with ObsServer(metrics=metrics, tracer=tr, port=0) as srv:
+        code, body = _get(srv.url + "/healthz")
+        assert code == 200 and body == "ok\n"
+
+        code, body = _get(srv.url + "/metrics")
+        assert code == 200 and "reads_total 7" in body
+
+        code, body = _get(srv.url + "/trace?n=1")
+        doc = json.loads(body)
+        assert code == 200 and len(doc["spans"]) == 1
+        assert doc["spans"][0]["name"] == "flush"  # newest last
+
+        code, body = _get(srv.url + "/attrib")
+        rep = json.loads(body)
+        assert code == 200 and rep["n_flushes"] == 1
+        assert any(r["stage"] == "align" for r in rep["stages"])
+
+
+def test_obs_server_404s():
+    with ObsServer(port=0) as srv:  # nothing attached
+        for path in ("/metrics", "/trace", "/attrib", "/nope"):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url + path)
+            assert ei.value.code == 404
+
+
+# ----------------------------------------------------------------- metrics --
+def test_histogram_quantiles_monotone():
+    h = Histogram()
+    for v in (1e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2, 0.1, 1.0):
+        h.observe(v)
+    qs = [h.quantile(q) for q in (0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)]
+    assert qs == sorted(qs)
+    assert qs[-1] <= h._bounds[-1]
+
+
+def test_histogram_boundary_observation_exact():
+    h = Histogram(lo=1.0, hi=100.0, n_buckets=9)
+    for b in h._bounds:
+        h.observe(b)  # lands in the bucket it bounds, never the next one
+    st = h.stats()
+    assert st["count"] == len(h._bounds)
+    assert st["p50"] <= st["p99"] <= h._bounds[-1]
+    # clamped outlier still counts
+    h.observe(1e9)
+    assert h.stats()["count"] == len(h._bounds) + 1
+
+
+def test_metrics_snapshot_is_flat_and_consistent():
+    m = Metrics()
+    m.counter("c").inc(3)
+    m.gauge("g").set(2.5)
+    m.histogram("h").observe(0.01)
+    snap = m.snapshot()
+    assert snap["c"] == 3 and snap["g"] == 2.5
+    assert snap["h_count"] == 1 and snap["h_p50"] <= snap["h_p99"]
+    assert "c 3" in m.render()

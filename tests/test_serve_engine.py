@@ -74,7 +74,11 @@ def test_executor_cache_one_trace_per_bucket(engine, reads):
     engine.map_all(list(short.reads))  # repeat traffic into both buckets
     engine.map_all(list(long.reads))
     assert engine.n_executors == 2  # one per (bucket_cap, config)
-    assert engine.trace_counts == {96: 1, 192: 1}
+    # linear executors trace their seed_filter and align stages once per
+    # bucket cap (the two-jit split that makes stage timing observable)
+    assert engine.trace_counts == {
+        (96, "seed_filter"): 1, (96, "align"): 1,
+        (192, "seed_filter"): 1, (192, "align"): 1}
 
 
 def test_deadline_triggered_flush(epi, reads):

@@ -161,11 +161,14 @@ def test_engine_sharded_matches_single(epi, reads):
         r1 = eng1.map_all(list(reads.reads))
     with ServeEngine(epi, EngineConfig(num_shards=2, **base)) as eng2:
         r2 = eng2.map_all(list(reads.reads))
-        assert eng2.trace_counts == {128: 1}  # one align-stage trace
+        # one scatter + one align trace for the single bucket cap
+        assert eng2.trace_counts == {(128, "scatter"): 1,
+                                     (128, "align"): 1}
         # second pass is served from the result cache under the token key
         r2c = eng2.map_all(list(reads.reads))
         assert all(r.cached for r in r2c)
-        assert eng2.trace_counts == {128: 1}
+        assert eng2.trace_counts == {(128, "scatter"): 1,
+                                     (128, "align"): 1}
     for a, b in zip(r1, r2):
         assert (a.position, a.distance, a.n_ops) == \
             (b.position, b.distance, b.n_ops)

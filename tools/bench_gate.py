@@ -1,0 +1,99 @@
+"""Continuous perf gate: compare a bench summary against a committed anchor.
+
+Walks both JSON trees and compares every ``reads_per_s`` leaf (any dict
+key containing that substring, at any nesting depth) in the current
+``bench_summary.json`` against the anchor committed with the PR that
+last touched performance (``BENCH_PR*.json``).  A key regressing below
+``factor`` × anchor fails the build; keys present in only one file are
+reported but never fail (benchmarks come and go across PRs).
+
+The default factor 0.85 tolerates runner-to-runner noise (GitHub
+machines vary run to run) while catching the >15% regressions a serving
+change can realistically introduce.  Escape hatches for emergencies:
+
+    BENCH_GATE_SKIP=1        skip the gate entirely (prints why it ran)
+    BENCH_GATE_FACTOR=0.7    widen the tolerance for a known-noisy run
+
+    python tools/bench_gate.py bench_summary.json BENCH_PR7.json
+    python tools/bench_gate.py current.json anchor.json --factor 0.9
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def collect(node, prefix: str = "") -> dict[str, float]:
+    """Flatten every numeric ``reads_per_s``-ish leaf to dotted-path keys."""
+    out: dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (dict, list)):
+                out.update(collect(v, path))
+            elif "reads_per_s" in str(k) and isinstance(v, (int, float)):
+                out[path] = float(v)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(collect(v, f"{prefix}[{i}]"))
+    return out
+
+
+def gate(current: dict, anchor: dict, factor: float) -> tuple[list, list]:
+    """Return (failures, report_lines) for every shared throughput key."""
+    cur, ref = collect(current), collect(anchor)
+    failures, lines = [], []
+    for key in sorted(ref):
+        if key not in cur:
+            lines.append(f"  {key}: anchor-only ({ref[key]:.2f}), skipped")
+            continue
+        c, r = cur[key], ref[key]
+        ratio = c / r if r > 0 else float("inf")
+        verdict = "ok" if ratio >= factor else "REGRESSION"
+        lines.append(f"  {key}: {r:.2f} -> {c:.2f} reads/s "
+                     f"({ratio:.2%} of anchor) {verdict}")
+        if ratio < factor:
+            failures.append((key, r, c, ratio))
+    for key in sorted(set(cur) - set(ref)):
+        lines.append(f"  {key}: new key ({cur[key]:.2f}), skipped")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="bench_summary.json from this run")
+    ap.add_argument("anchor", help="committed anchor (BENCH_PR*.json)")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("BENCH_GATE_FACTOR", 0.85)),
+                    help="minimum current/anchor ratio per key "
+                         "(default 0.85 = fail on >15%% regression; env "
+                         "BENCH_GATE_FACTOR overrides)")
+    args = ap.parse_args(argv)
+
+    if os.environ.get("BENCH_GATE_SKIP"):
+        print("bench gate: skipped (BENCH_GATE_SKIP set)")
+        return 0
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.anchor) as f:
+        anchor = json.load(f)
+
+    failures, lines = gate(current, anchor, args.factor)
+    print(f"bench gate: {args.current} vs {args.anchor} "
+          f"(factor {args.factor})")
+    print("\n".join(lines))
+    if failures:
+        print(f"bench gate: {len(failures)} key(s) regressed below "
+              f"{args.factor:.0%} of anchor:")
+        for key, r, c, ratio in failures:
+            print(f"  {key}: {r:.2f} -> {c:.2f} ({ratio:.2%})")
+        return 1
+    print("bench gate: all throughput keys within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

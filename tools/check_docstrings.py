@@ -32,6 +32,10 @@ SCOPE = [
     "src/repro/shard/mapper.py",
     "src/repro/shard/graph_mapper.py",
     "src/repro/shard/failover.py",
+    "src/repro/obs/__init__.py",
+    "src/repro/obs/trace.py",
+    "src/repro/obs/attrib.py",
+    "src/repro/obs/http.py",
 ]
 MIN_LEN = 10  # a docstring must actually say something
 

@@ -40,4 +40,15 @@ python -m repro.launch.serve_genomics --num-shards 2 $SMALL \
     --out "$OUT/sharded.paf"
 cmp "$OUT/out.paf" "$OUT/sharded.paf"
 
+echo "== tracing + live obs endpoints (--trace-out / --http-port)"
+python -m repro.launch.serve_genomics --trace-out "$OUT/trace.json" \
+    --http-port 0 $SMALL --out "$OUT/traced.paf"
+cmp "$OUT/out.paf" "$OUT/traced.paf"  # tracing never changes output
+python - "$OUT/trace.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert any(e.get("name") == "flush" for e in doc["traceEvents"])
+print(f"trace.json: {len(doc['traceEvents'])} events")
+EOF
+
 echo "quickstart smoke: all README commands ran"

@@ -12,10 +12,12 @@ Prints ``name,us_per_call,derived`` CSV rows.
   align_dispatch   — repro.align backend dispatch (lax vs pallas_dc*)
   serve_engine     — micro-batching engine under Poisson arrivals
   shard_scaling    — reads/s vs 1/2/4 reference shards (repro.shard)
-  roofline         — §Roofline table from the multi-pod dry-run
+  roofline         — per-kernel predicted-vs-measured roofline table
+                     (§Roofline: all align backends × bucket caps)
 
 ``--smoke`` runs the CI-sized subset (align_dispatch + serve_engine +
-segram_e2e + graph_serve + shard_scaling) and ``--json PATH`` writes
+segram_e2e + graph_serve + shard_scaling + roofline) and ``--json PATH``
+writes
 their summaries into one artifact; the serving modules also emit their
 per-stage Amdahl attribution (`repro.obs`) into the summary and, under
 ``--smoke``, Perfetto traces (``trace_serve_engine.json``,
@@ -38,7 +40,7 @@ if __package__ in (None, ""):  # script-style: python benchmarks/run.py
 
 # modules with a --smoke flag and a summary-dict return (the CI subset)
 SMOKE_MODS = ("align_dispatch", "serve_engine", "segram_e2e", "graph_serve",
-              "shard_scaling")
+              "shard_scaling", "roofline")
 
 
 def main(argv=None) -> None:
@@ -84,6 +86,9 @@ def main(argv=None) -> None:
                 if args.smoke and name in ("serve_engine", "graph_serve"):
                     # smoke artifacts: Perfetto traces next to the JSON
                     sub += ["--trace-out", f"trace_{name}.json"]
+                if args.smoke and name == "roofline":
+                    # standalone table artifact (CI uploads it)
+                    sub += ["--json", "roofline_table.json"]
                 out = mod.main(sub)
             else:
                 out = mod.main()

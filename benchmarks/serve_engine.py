@@ -7,12 +7,14 @@ every read padded to the single global cap (the old offline behaviour).
 Reports reads/s, p50/p99 latency, mean batch occupancy, padded-base
 waste, and cache hit rate per run — the EXPERIMENTS.md §Perf serve rows.
 
-A third, closed-loop pass runs the bucketed engine twice more — tracer
-off, then tracer on — to measure tracing overhead
-(``trace_overhead_frac``, the ISSUE's <3% budget) and to fold the traced
-spans into the per-stage Amdahl attribution ledger
-(``attribution`` in the JSON; `repro.obs.attrib`).  ``--trace-out``
-exports the traced pass as Perfetto/Chrome ``trace_event`` JSON.
+A third, closed-loop pass runs the bucketed engine in three modes —
+tracer off / tracer on / tracer + per-kernel roofline counters on — to
+measure tracing overhead (``trace_overhead_frac``) and counter-
+collection overhead (``counter_overhead_frac``), both against the
+ISSUE's <3% budget, and to fold the traced spans into the per-stage
+Amdahl attribution ledger (``attribution`` in the JSON;
+`repro.obs.attrib`).  ``--trace-out`` exports the traced pass as
+Perfetto/Chrome ``trace_event`` JSON.
 
     PYTHONPATH=src python benchmarks/serve_engine.py           # full mix
     PYTHONPATH=src python benchmarks/serve_engine.py --smoke   # CI-sized
@@ -21,12 +23,13 @@ exports the traced pass as Perfetto/Chrome ``trace_event`` JSON.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import time
 
 from repro.core import minimizer_index
 from repro.genomics import simulate
-from repro.obs import Tracer, build_ledger, render_report
+from repro.obs import RooflineManager, Tracer, build_ledger, render_report
 from repro.serve import EngineConfig, Metrics, ResultCache, ServeEngine, \
     poisson_load
 
@@ -80,46 +83,75 @@ def run_engine(index, reads, *, buckets, max_batch, max_delay_s, rate_rps,
 
 def trace_and_attribute(index, reads, warmup, *, buckets, max_batch,
                         filter_k, trace_out=None, reps: int = 8):
-    """Traced-vs-untraced closed-loop pass → overhead + Amdahl ledger.
+    """Three-mode closed-loop pass → overheads + Amdahl ledger.
 
-    Poisson runs are open-loop (rate-limited), so tracer overhead hides
-    in idle time there; back-to-back ``map_all`` exposes it.  One warmed
-    engine serves every rep (the tracer toggles via ``enabled``, exactly
-    the production on/off switch), and min-of-``reps`` per mode screens
-    out scheduler noise that would otherwise swamp a percent-level
-    comparison.
+    Poisson runs are open-loop (rate-limited), so instrumentation
+    overhead hides in idle time there; back-to-back ``map_all`` exposes
+    it.  One warmed engine serves every rep in three modes — tracer off,
+    tracer on, tracer + per-kernel roofline counters on (exactly the
+    production switches: ``tracer.enabled`` / ``roofline.enabled``).
+    The mode order reverses on alternate reps (ABBA) so slow drift
+    cancels, and each overhead is the ratio of per-mode minima over
+    ``reps`` reps: scheduler noise on this class of container is
+    additive and bursty (a burst inflates one rep by 10-50%), so each
+    leg's min is its cleanest observed run and the ratio of minima is
+    robust unless a burst poisons *all* reps of a leg — which the rep
+    count is sized to make unlikely.  (Per-rep paired ratios were
+    tried and rejected: one burst on the off leg of a single rep
+    deflates that rep's ratio by tens of percent, and min/median over
+    ratios inherit that tail.)
     """
     tracer = Tracer()
     tracer.enabled = False  # warmup (compiles) stays out of the ledger
+    # analytic counters only (measure=False: no cost_analysis compiles
+    # on the overhead clock); enabled toggles per mode below
+    roofline = RooflineManager(tracer=tracer, enabled=False, measure=False)
     # a generous deadline keeps every flush full: the flush count (the
     # dominant run-time term) is then deterministic across reps, which
     # a 2 ms deadline on a busy box cannot guarantee
     cfg = EngineConfig(buckets=buckets, max_batch=max_batch,
                        max_delay_s=0.25, filter_k=filter_k,
                        minimizer_w=8, minimizer_k=12, cache_capacity=0)
-    loop_reads = list(reads) * 2  # longer window → percent-level signal
-    t_off, t_on = [], []
-    with ServeEngine(index, cfg, tracer=tracer) as engine:
+    loop_reads = list(reads) * 4  # longer window → percent-level signal
+    times = {"off": [], "trace": [], "counters": []}
+    with ServeEngine(index, cfg, tracer=tracer,
+                     roofline=roofline) as engine:
         engine.map_all(warmup)  # compile off-clock
-        def one(traced: bool) -> None:
-            tracer.enabled = traced
+        def one(mode: str) -> None:
+            tracer.enabled = mode != "off"
+            roofline.enabled = mode == "counters"
+            gc.collect()  # start every leg from the same heap state
             t0 = time.perf_counter()
             engine.map_all(loop_reads)
-            (t_on if traced else t_off).append(time.perf_counter() - t0)
+            times[mode].append(time.perf_counter() - t0)
 
-        for i in range(reps):  # ABBA ordering cancels slow drift between
-            for traced in ((False, True), (True, False))[i % 2]:  # modes
-                one(traced)
+        modes = ("off", "trace", "counters")
+        # GC pauses otherwise land preferentially in the legs that
+        # allocate most (spans + counter dicts), charging collector
+        # scheduling — not instrumentation — to those modes
+        gc.disable()
+        try:
+            for i in range(reps):  # ABBA ordering cancels slow drift
+                for mode in (modes, modes[::-1])[i % 2]:  # between modes
+                    one(mode)
+        finally:
+            gc.enable()
     report = build_ledger(tracer.log).report()
     print(render_report(report))
     if trace_out:
         tracer.log.export_chrome(trace_out)
         print(f"wrote {trace_out}")
+    def overhead(mode: str) -> float:
+        return round(min(times[mode]) / max(min(times["off"]), 1e-9)
+                     - 1.0, 4)
+
     return {
-        "untraced_s": round(min(t_off), 4),
-        "traced_s": round(min(t_on), 4),
-        "trace_overhead_frac": round(
-            min(t_on) / max(min(t_off), 1e-9) - 1.0, 4),
+        "untraced_s": round(min(times["off"]), 4),
+        "traced_s": round(min(times["trace"]), 4),
+        "counters_s": round(min(times["counters"]), 4),
+        "trace_overhead_frac": overhead("trace"),
+        "counter_overhead_frac": overhead("counters"),
+        "roofline": roofline.report(measure=False),
         "attribution": report.to_dict(),
     }
 
@@ -180,6 +212,7 @@ def main(argv=None):
     att = tr["attribution"]
     row("serve_engine_tracing", 0.0,
         f"overhead_frac={tr['trace_overhead_frac']};"
+        f"counter_overhead_frac={tr['counter_overhead_frac']};"
         f"coverage={att['coverage']};"
         f"serial_fraction={att['serial_fraction']}")
 

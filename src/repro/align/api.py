@@ -24,8 +24,11 @@ and ``lax`` on CPU.
 Block-size autotune: the kernels' batch tile ``block_bt`` trades launch
 count against padding waste.  ``align_batch`` consults a per-process
 cache keyed ``(backend, bucket_cap, k)``; misses fall back to a
-heuristic, or measure candidates on synthetic input when
-``REPRO_ALIGN_AUTOTUNE=1`` (or via an explicit :func:`autotune` call).
+heuristic, measure candidates on synthetic input when
+``REPRO_ALIGN_AUTOTUNE=1`` (or via an explicit :func:`autotune` call),
+or — ``REPRO_ALIGN_AUTOTUNE=model`` — are seeded from the analytic
+roofline cost model (`repro.obs.roofline.predict_block_bt`) with zero
+on-device search, via :func:`model_seed`.
 """
 from __future__ import annotations
 
@@ -157,6 +160,27 @@ def autotune(backend: str, bucket_cap: int, k: int, *,
     return best_bt
 
 
+def model_seed(backend: str, bucket_cap: int, k: int, *,
+               batch: int = 64, spec=None) -> int:
+    """Seed the block cache from the analytic roofline model.
+
+    Ranks candidate ``block_bt`` values by predicted launch cost
+    (``launches·overhead + max(ops/peak, bytes/bw)`` against the
+    platform's `DeviceSpec`) instead of timing them — no compiles, no
+    device work.  Same cache slot empirical :func:`autotune` fills, so
+    the two modes are interchangeable per site.
+    """
+    from repro.obs.roofline import predict_block_bt
+
+    be = get_backend(backend)
+    if not be.uses_pallas:  # lax/ref vmap the whole batch; nothing to tune
+        bt = _heuristic_block(batch)
+    else:
+        bt = predict_block_bt(backend, bucket_cap, k, batch, spec=spec)
+    _BLOCK_CACHE[(backend, bucket_cap, k)] = bt
+    return bt
+
+
 def clear_autotune_cache() -> None:
     """Drop every cached block size (tests / re-tuning on new hardware)."""
     _BLOCK_CACHE.clear()
@@ -187,10 +211,12 @@ def align_batch(
     batch = int(texts.shape[0])
     if block_bt is None:
         key = (be.name, cap, cfg.k)
-        if (be.uses_pallas and key not in _BLOCK_CACHE
-                and os.environ.get("REPRO_ALIGN_AUTOTUNE") == "1"
-                and not isinstance(texts, jax.core.Tracer)):
-            autotune(be.name, cap, cfg.k, batch=max(batch, 16), cfg=cfg)
+        mode = os.environ.get("REPRO_ALIGN_AUTOTUNE")
+        if be.uses_pallas and key not in _BLOCK_CACHE:
+            if mode == "model":
+                model_seed(be.name, cap, cfg.k, batch=max(batch, 16))
+            elif mode == "1" and not isinstance(texts, jax.core.Tracer):
+                autotune(be.name, cap, cfg.k, batch=max(batch, 16), cfg=cfg)
         block_bt = block_size_for(be.name, cap, cfg.k, batch)
     return be.fn(texts, patterns, p_lens, t_lens, cfg=cfg, p_cap=cap,
                  emit_cigar=emit_cigar, block_bt=block_bt,

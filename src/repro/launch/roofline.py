@@ -1,9 +1,15 @@
 """Roofline-term derivation from the compiled dry-run (TPU v5e targets).
 
 Terms (per device, seconds):
-    compute    = FLOPs / 197e12        (bf16 peak per chip)
-    memory     = HBM bytes / 819e9
-    collective = Σ link-bytes / 50e9   (per ICI link, ring-weighted)
+    compute    = FLOPs / peak_flops    (bf16 peak per chip; v5e 197e12)
+    memory     = HBM bytes / hbm_bw    (v5e 819e9)
+    collective = Σ link-bytes / link_bw  (per ICI link, ring-weighted;
+                 v5e 50e9)
+
+The device constants come from `repro.obs.roofline.DeviceSpec` (the
+bundled ``tpu_v5e.json`` — the numbers that used to be hardcoded here);
+the module-level ``PEAK_FLOPS``/``HBM_BW``/``LINK_BW`` names remain as
+the loaded values for existing callers.
 
 Two sources, reported side by side (EXPERIMENTS.md §Roofline):
 
@@ -26,9 +32,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
-HBM_BW = 819e9  # bytes/s / chip
-LINK_BW = 50e9  # bytes/s / ICI link
+from repro.obs.roofline import DeviceSpec
+
+_V5E = DeviceSpec.load("tpu_v5e")
+PEAK_FLOPS = _V5E.peak_flops  # bf16 / chip (v5e)
+HBM_BW = _V5E.hbm_bw  # bytes/s / chip
+LINK_BW = _V5E.link_bw  # bytes/s / ICI link
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
                 "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8": 1}

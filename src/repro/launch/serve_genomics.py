@@ -165,8 +165,8 @@ def main(argv=None):
                          "trace_event JSON here (plus the per-stage "
                          "Amdahl table on exit)")
     ap.add_argument("--http-port", type=int, default=None,
-                    help="serve /metrics /healthz /trace /attrib on this "
-                         "port while running (0 = ephemeral)")
+                    help="serve /metrics /healthz /trace /attrib /roofline "
+                         "on this port while running (0 = ephemeral)")
     args = ap.parse_args(argv)
 
     prof = simulate.PROFILES[args.profile]
@@ -217,20 +217,24 @@ def main(argv=None):
     shard_ids = np.arange(pi, args.reads, pc)  # this host's disjoint slice
 
     tracer = None
+    roofline = None
     if args.trace_out or args.http_port is not None:
-        from repro.obs import Tracer
+        from repro.obs import RooflineManager, Tracer
 
         tracer = Tracer()
+        roofline = RooflineManager(tracer=tracer)
 
     obs_server = None
-    with ServeEngine(epi, cfg, tracer=tracer) as engine:
+    with ServeEngine(epi, cfg, tracer=tracer, roofline=roofline) as engine:
+        if roofline is not None:
+            roofline.metrics = engine.metrics
         if args.http_port is not None:
             from repro.obs.http import ObsServer
 
             obs_server = ObsServer(metrics=engine.metrics, tracer=tracer,
-                                   port=args.http_port)
+                                   roofline=roofline, port=args.http_port)
             print(f"obs endpoints at {obs_server.url} "
-                  f"(/metrics /healthz /trace /attrib)")
+                  f"(/metrics /healthz /trace /attrib /roofline)")
         print(f"align backend: {engine.align_backend}")
         t0 = time.time()
         if args.online:
@@ -251,6 +255,13 @@ def main(argv=None):
         from repro.obs import build_ledger, render_report
 
         print(render_report(build_ledger(tracer.log).report()))
+        if roofline is not None:
+            # measure=False: no cost_analysis compiles at shutdown
+            for row in roofline.report(measure=False)["kernels"]:
+                print(f"roofline {row['kernel']}: "
+                      f"{row['achieved_ops_per_s'] / 1e9:.2f} Gop/s, "
+                      f"intensity {row['intensity']:.2f} op/B, "
+                      f"{row['pct_of_roof']:.2%} of roof")
         if args.trace_out:
             tracer.log.export_chrome(args.trace_out)
             print(f"wrote {args.trace_out}")

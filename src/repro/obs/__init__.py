@@ -15,18 +15,29 @@ automatically on every serving and benchmark run (DESIGN.md §12):
   each stage.
 * `http` — stdlib exposition endpoint serving ``/metrics`` (the
   engine's `Metrics.render()`), ``/healthz``, ``/trace`` (last-N
-  spans), and ``/attrib`` (the live Amdahl report).
+  spans), ``/attrib`` (the live Amdahl report), and ``/roofline``
+  (the per-kernel roofline table).
+* `roofline` — kernel-level roofline layer (DESIGN.md §13): exact
+  analytic op/byte counters per align-kernel launch, pluggable JSON
+  `DeviceSpec` roofline targets, XLA ``cost_analysis()`` cross-checks,
+  and the analytic block-size model behind
+  ``REPRO_ALIGN_AUTOTUNE=model``.
 
-Stdlib-only by design: it must import (and stay cheap) in every
-environment the serving path runs in, kernels or not.
+Stdlib-only at import by design: it must import (and stay cheap) in
+every environment the serving path runs in, kernels or not — the
+roofline module's measured side lazy-imports `jax` only when asked.
 """
 from .attrib import (AttributionReport, StageLedger, build_ledger,
                      render_report)
 from .http import ObsServer
+from .roofline import (DeviceSpec, KernelCounters, RooflineManager,
+                       align_counters, dc_window_counters, predict_block_bt)
 from .trace import NULL_TRACER, Span, StageTimer, TraceLog, Tracer
 
 __all__ = [
     "Span", "Tracer", "TraceLog", "StageTimer", "NULL_TRACER",
     "StageLedger", "AttributionReport", "build_ledger", "render_report",
     "ObsServer",
+    "DeviceSpec", "KernelCounters", "RooflineManager", "align_counters",
+    "dc_window_counters", "predict_block_bt",
 ]

@@ -79,14 +79,24 @@ class StageLedger:
 
     def __init__(self) -> None:
         self._durs: dict[str, list[float]] = defaultdict(list)
+        self._ops: dict[str, float] = defaultdict(float)  # analytic word-ops
+        self._bytes: dict[str, float] = defaultdict(float)  # analytic HBM B
         self.flush_s = 0.0
         self.n_flushes = 0
         self.attributed_s = 0.0  # stage time parented inside flush spans
 
-    def add(self, stage: str, duration_s: float) -> None:
-        """Record one stage execution (unknown names fold into "other")."""
-        self._durs[stage if stage in _STAGE_SET else "other"].append(
-            max(float(duration_s), 0.0))
+    def add(self, stage: str, duration_s: float, *, word_ops: float = 0.0,
+            hbm_bytes: float = 0.0) -> None:
+        """Record one stage execution (unknown names fold into "other").
+
+        ``word_ops``/``hbm_bytes`` are the stage's analytic kernel
+        counters when known (the engine attaches them to align spans) —
+        they surface as ops/s and intensity columns in the report.
+        """
+        name = stage if stage in _STAGE_SET else "other"
+        self._durs[name].append(max(float(duration_s), 0.0))
+        self._ops[name] += max(float(word_ops), 0.0)
+        self._bytes[name] += max(float(hbm_bytes), 0.0)
 
     def total(self, stage: str) -> float:
         """Accumulated wall seconds recorded for one stage."""
@@ -138,6 +148,13 @@ class StageLedger:
                     1.0 / ((1.0 - frac) + frac / n), 3) if frac < 1.0 else n
             row["speedup_inf"] = (round(1.0 / (1.0 - frac), 3)
                                   if frac < 1.0 else float("inf"))
+            # per-kernel roofline columns, when counters were attached
+            ops, nbytes = self._ops.get(name, 0.0), self._bytes.get(name, 0.0)
+            if ops > 0.0 or nbytes > 0.0:
+                row["word_ops"] = ops
+                row["hbm_bytes"] = nbytes
+                row["ops_per_s"] = round(ops / total, 1) if total else 0.0
+                row["intensity"] = round(ops / nbytes, 4) if nbytes else 0.0
             stages.append(row)
         return AttributionReport(
             stages=stages, busy_s=round(busy, 6),
@@ -165,7 +182,9 @@ def build_ledger(spans: TraceLog | Iterable[Span]) -> StageLedger:
     for s in spans:
         if s.name not in _STAGE_SET:
             continue
-        led.add(s.name, s.duration_s)
+        led.add(s.name, s.duration_s,
+                word_ops=s.attrs.get("word_ops", 0.0) or 0.0,
+                hbm_bytes=s.attrs.get("hbm_bytes", 0.0) or 0.0)
         if s.parent_id in flushes and s.name != "enqueue_wait":
             covered[s.parent_id] += s.duration_s
             led.attributed_s += s.duration_s

@@ -1,4 +1,4 @@
-"""Stdlib HTTP exposition: /metrics, /healthz, /trace, /attrib.
+"""Stdlib HTTP exposition: /metrics, /healthz, /trace, /attrib, /roofline.
 
 `ObsServer` runs a ``ThreadingHTTPServer`` on a daemon thread and serves
 the observability plane of one serving process:
@@ -7,10 +7,15 @@ the observability plane of one serving process:
   (Prometheus-style ``name value`` lines).
 * ``GET /healthz``  — liveness probe, always ``200 ok`` while the
   thread is up (a k8s-style readiness hook point).
-* ``GET /trace``    — the last-N finished spans as JSON
-  (``?n=500`` caps the tail; default 256).
+* ``GET /trace``    — the last-N finished spans as JSON (``?n=500``
+  caps the tail; default 256, clamped to the ring size; non-integer or
+  negative ``n`` is a ``400``).
 * ``GET /attrib``   — the live per-stage Amdahl report folded from the
   tracer's ring buffer (`repro.obs.attrib`).
+* ``GET /roofline`` — the per-kernel roofline table from an attached
+  `RooflineManager` (`repro.obs.roofline`): analytic vs measured ops
+  and bytes, intensity, %-of-roof per ``(backend, bucket_cap)`` site.
+  ``?measure=0`` skips the lazy ``cost_analysis()`` compile step.
 
 Construct with ``port=0`` for an ephemeral port (tests); ``.port``
 reports the bound port either way.  ``close()`` shuts the thread down.
@@ -30,11 +35,12 @@ class ObsServer:
     """Daemon-thread HTTP endpoint over a `Metrics` registry + `Tracer`."""
 
     def __init__(self, *, metrics=None, tracer: Tracer | None = None,
-                 host: str = "127.0.0.1", port: int = 0) -> None:
+                 roofline=None, host: str = "127.0.0.1",
+                 port: int = 0) -> None:
         obs = self
 
         class Handler(BaseHTTPRequestHandler):
-            """Routes the four GET endpoints over the enclosing ObsServer."""
+            """Routes the five GET endpoints over the enclosing ObsServer."""
 
             def log_message(self, *args):
                 """Silence the default per-request stderr logging."""
@@ -63,14 +69,23 @@ class ObsServer:
                         if obs.tracer is None:
                             self._send(404, "no tracer attached\n")
                         else:
-                            q = parse_qs(url.query)
-                            n = int(q.get("n", ["256"])[0])
-                            self._send(
-                                200,
-                                json.dumps({"spans": obs.tracer.log.last(n),
-                                            "dropped": obs.tracer.log.dropped
-                                            }),
-                                "application/json")
+                            q = parse_qs(url.query, keep_blank_values=True)
+                            raw = q.get("n", ["256"])[0]
+                            try:
+                                n = int(raw)
+                            except ValueError:
+                                n = -1
+                            if n < 0:
+                                self._send(400, f"bad n={raw!r}: must be a "
+                                                "non-negative integer\n")
+                            else:
+                                n = min(n, obs.tracer.log.max_spans)
+                                self._send(
+                                    200,
+                                    json.dumps(
+                                        {"spans": obs.tracer.log.last(n),
+                                         "dropped": obs.tracer.log.dropped}),
+                                    "application/json")
                     elif url.path == "/attrib":
                         if obs.tracer is None:
                             self._send(404, "no tracer attached\n")
@@ -78,14 +93,28 @@ class ObsServer:
                             rep = build_ledger(obs.tracer.log).report()
                             self._send(200, json.dumps(rep.to_dict()),
                                        "application/json")
+                    elif url.path == "/roofline":
+                        if obs.roofline is None:
+                            self._send(404, "no roofline manager attached\n")
+                        else:
+                            q = parse_qs(url.query)
+                            measure = q.get("measure", ["1"])[0] not in (
+                                "0", "false", "no")
+                            self._send(
+                                200,
+                                json.dumps(
+                                    obs.roofline.report(measure=measure)),
+                                "application/json")
                     else:
                         self._send(404, "unknown path; try /metrics, "
-                                        "/healthz, /trace, /attrib\n")
+                                        "/healthz, /trace, /attrib, "
+                                        "/roofline\n")
                 except BrokenPipeError:  # client went away mid-write
                     pass
 
         self.metrics = metrics
         self.tracer = tracer
+        self.roofline = roofline
         self._srv = ThreadingHTTPServer((host, port), Handler)
         self._srv.daemon_threads = True
         self.host, self.port = self._srv.server_address[:2]

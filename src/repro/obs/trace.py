@@ -16,7 +16,9 @@ The log exports two ways:
   Scoped spans become ``"ph": "X"`` complete events on their thread's
   track; spans marked ``async_=True`` (e.g. per-request enqueue waits,
   which overlap freely) become ``"b"``/``"e"`` async pairs so they
-  never break slice nesting; instant events become ``"ph": "i"``.
+  never break slice nesting; instant events become ``"ph": "i"``;
+  counter samples (``tracer.counter(...)``, numeric attrs only) become
+  ``"ph": "C"`` counter tracks — Perfetto plots each attr as a series.
 * ``export_jsonl(path)`` — one structured JSON object per line (name,
   t_start/t_end, duration, parent, tid, attrs), the machine-readable
   sink for offline analysis.
@@ -46,7 +48,7 @@ class Span:
     span_id: int = 0
     parent_id: int | None = None
     tid: str = "main"
-    kind: str = "span"  # "span" | "instant" | "async"
+    kind: str = "span"  # "span" | "instant" | "async" | "counter"
     attrs: dict = field(default_factory=dict)
 
     @property
@@ -96,6 +98,11 @@ class TraceLog:
         self.dropped = 0  # spans evicted by the ring bound
         self.t0 = time.monotonic()  # export time base
 
+    @property
+    def max_spans(self) -> int:
+        """Ring capacity (the clamp bound for ``/trace?n=``)."""
+        return self._buf.maxlen or 0
+
     def append(self, span: Span) -> None:
         """Push one finished span (evicts the oldest when full)."""
         with self._lock:
@@ -141,6 +148,8 @@ class TraceLog:
             args = {k: v for k, v in s.attrs.items()}
             if s.kind == "instant":
                 events.append({**base, "ph": "i", "s": "t", "args": args})
+            elif s.kind == "counter":
+                events.append({**base, "ph": "C", "args": args})
             elif s.kind == "async":
                 ident = f"0x{s.span_id:x}"
                 events.append({**base, "ph": "b", "id": ident, "args": args})
@@ -240,6 +249,20 @@ class Tracer:
             name=name, t_start=t, t_end=t, span_id=next(self._ids),
             parent_id=self.current_parent(), tid=self._tid(),
             kind="instant", attrs=attrs))
+
+    def counter(self, name: str, **values) -> None:
+        """Counter sample (``ph: "C"``): each numeric kwarg is a series.
+
+        Samples with the same ``name`` form one Perfetto counter track;
+        pass cumulative values for monotone plots (the roofline manager
+        sends running op/byte totals per kernel).
+        """
+        if not self.enabled:
+            return
+        t = time.monotonic()
+        self.log.append(Span(
+            name=name, t_start=t, t_end=t, span_id=next(self._ids),
+            parent_id=None, tid=self._tid(), kind="counter", attrs=values))
 
 
 NULL_TRACER = Tracer(enabled=False)

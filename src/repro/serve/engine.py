@@ -167,11 +167,15 @@ class ServeEngine:
     def __init__(self, index,
                  config: EngineConfig = EngineConfig(),
                  metrics: Metrics | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None,
+                 roofline=None):
         self.config = config
         # NULL_TRACER's span()/add()/event() are near-free no-ops, so the
         # untraced hot path stays untaxed (ISSUE: <3% overhead traced)
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # optional repro.obs.roofline.RooflineManager: per-flush analytic
+        # kernel counters keyed by this engine's align dispatch sites
+        self.roofline = roofline
 
         def check_minimizer(kw):
             if (kw["w"], kw["k"]) != (config.minimizer_w, config.minimizer_k):
@@ -427,15 +431,21 @@ class ServeEngine:
             c = self.config
             fbits = min(c.filter_bits, cap)
             backend = self.align_backend
-            if os.environ.get("REPRO_ALIGN_AUTOTUNE") == "1":
+            mode = os.environ.get("REPRO_ALIGN_AUTOTUNE")
+            if mode in ("1", "model"):
                 # tune eagerly before jitting: under the executor's trace
                 # align_batch only *consults* the block cache (it cannot
                 # time candidates on tracers)
                 from repro import align as align_dispatch
 
                 if align_dispatch.get_backend(backend).uses_pallas:
-                    align_dispatch.autotune(backend, cap, c.genasm.k,
-                                            batch=c.max_batch, cfg=c.genasm)
+                    if mode == "model":
+                        align_dispatch.model_seed(backend, cap, c.genasm.k,
+                                                  batch=c.max_batch)
+                    else:
+                        align_dispatch.autotune(backend, cap, c.genasm.k,
+                                                batch=c.max_batch,
+                                                cfg=c.genasm)
 
             n_cand = c.shard_candidates or c.max_candidates
             if c.num_shards > 1 and c.workload == "graph":
@@ -581,10 +591,31 @@ class ServeEngine:
                     + [np.zeros(0, np.int8)] * (c.max_batch - len(reqs)),
                     cap)
             res = fn(payload, arr, lens)
+            last_times = getattr(fn, "last_times", ())
+            # per-kernel analytic counters: the linear workload's align
+            # stage has an exact op/byte model (graph/sharded executors
+            # have their own launch structure — not modeled yet)
+            kc = None
+            rf = self.roofline
+            if (rf is not None and rf.enabled and c.workload == "linear"
+                    and c.num_shards == 1):
+                from repro import align as align_dispatch
+
+                align_s = next((t1 - t0 for name, t0, t1, _ in last_times
+                                if name == "align"), None)
+                kc = rf.record_flush(
+                    self.align_backend, cap, c.genasm.k, c.max_batch,
+                    align_s=align_s,
+                    block_bt=align_dispatch.block_size_for(
+                        self.align_backend, cap, c.genasm.k, c.max_batch))
             # replay the executor's per-stage monotonic windows as child
             # spans of this flush (seed_filter/prefilter/dc_filter/
-            # scatter/merge/align, with compile/dc_rows/shard attrs)
-            for name, t0, t1, attrs in getattr(fn, "last_times", ()):
+            # scatter/merge/align, with compile/dc_rows/shard attrs; the
+            # align span carries the analytic counters when modeled)
+            for name, t0, t1, attrs in last_times:
+                if name == "align" and kc is not None:
+                    attrs = {**attrs, "word_ops": kc.word_ops,
+                             "hbm_bytes": kc.hbm_bytes}
                 tr.add(name, t0, t1, bucket_cap=cap, **attrs)
             pos = np.asarray(res.position)
             dist = np.asarray(res.distance)

@@ -1,0 +1,89 @@
+"""tools/bench_gate.py: throughput-key comparison and schema-drift guard."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_gate",
+    pathlib.Path(__file__).resolve().parents[1] / "tools" / "bench_gate.py")
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+def test_collect_flattens_nested_reads_per_s_leaves():
+    tree = {"serve": {"bucketed": {"reads_per_s": 100.0, "p50_ms": 3.0}},
+            "rows": [{"reads_per_s": 7.5}],
+            "reads_per_s_online": 2}
+    got = bench_gate.collect(tree)
+    assert got == {"serve.bucketed.reads_per_s": 100.0,
+                   "rows[0].reads_per_s": 7.5,
+                   "reads_per_s_online": 2.0}
+
+
+def test_gate_passes_within_tolerance_and_fails_regressions():
+    anchor = {"a": {"reads_per_s": 100.0}, "b": {"reads_per_s": 50.0}}
+    ok = {"a": {"reads_per_s": 90.0}, "b": {"reads_per_s": 49.0}}
+    failures, lines, n_shared = bench_gate.gate(ok, anchor, 0.85)
+    assert failures == [] and n_shared == 2
+    bad = {"a": {"reads_per_s": 50.0}, "b": {"reads_per_s": 49.0}}
+    failures, _, _ = bench_gate.gate(bad, anchor, 0.85)
+    assert [f[0] for f in failures] == ["a.reads_per_s"]
+
+
+def test_gate_anchor_only_and_new_keys_reported_not_failed():
+    anchor = {"kept": {"reads_per_s": 10.0}, "gone": {"reads_per_s": 5.0}}
+    current = {"kept": {"reads_per_s": 10.0}, "fresh": {"reads_per_s": 9.0}}
+    failures, lines, n_shared = bench_gate.gate(current, anchor, 0.85)
+    assert failures == [] and n_shared == 1
+    text = "\n".join(lines)
+    assert "gone.reads_per_s: anchor-only" in text
+    assert "fresh.reads_per_s: new key" in text
+
+
+def test_gate_zero_overlap_reports_zero_shared():
+    anchor = {"old_schema": {"reads_per_s": 10.0}}
+    current = {"new_schema": {"reads_per_s": 12.0}}
+    failures, _, n_shared = bench_gate.gate(current, anchor, 0.85)
+    assert failures == [] and n_shared == 0
+
+
+def _write(path, tree):
+    path.write_text(json.dumps(tree))
+    return str(path)
+
+
+def test_main_exits_nonzero_on_zero_shared_keys(tmp_path, capsys):
+    cur = _write(tmp_path / "cur.json", {"new": {"reads_per_s": 12.0}})
+    anc = _write(tmp_path / "anchor.json", {"old": {"reads_per_s": 10.0}})
+    assert bench_gate.main([cur, anc]) == 2
+    out = capsys.readouterr().out
+    assert "zero" in out and "schema drift" in out
+
+
+def test_main_passes_and_fails_regressions(tmp_path):
+    anc = _write(tmp_path / "anchor.json", {"a": {"reads_per_s": 100.0}})
+    good = _write(tmp_path / "good.json", {"a": {"reads_per_s": 99.0}})
+    bad = _write(tmp_path / "bad.json", {"a": {"reads_per_s": 10.0}})
+    assert bench_gate.main([good, anc]) == 0
+    assert bench_gate.main([bad, anc]) == 1
+
+
+def test_main_skip_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("BENCH_GATE_SKIP", "1")
+    cur = _write(tmp_path / "cur.json", {"new": {"reads_per_s": 1.0}})
+    anc = _write(tmp_path / "anchor.json", {"old": {"reads_per_s": 10.0}})
+    assert bench_gate.main([cur, anc]) == 0
+
+
+def test_gate_matches_committed_anchor_schema():
+    # the committed anchor must share keys with itself (sanity on the
+    # real artifact the CI gate runs against)
+    anchor_path = pathlib.Path(__file__).resolve().parents[1] / \
+        "BENCH_PR7.json"
+    if not anchor_path.exists():
+        pytest.skip("no committed anchor in this checkout")
+    anchor = json.loads(anchor_path.read_text())
+    failures, _, n_shared = bench_gate.gate(anchor, anchor, 0.85)
+    assert failures == [] and n_shared > 0

@@ -1,4 +1,4 @@
-"""repro.obs: spans, Perfetto export, Amdahl ledger, HTTP exposition."""
+"""repro.obs: spans, Perfetto export, Amdahl ledger, HTTP, roofline."""
 import json
 import threading
 import time
@@ -7,8 +7,9 @@ import urllib.request
 
 import pytest
 
-from repro.obs import (NULL_TRACER, ObsServer, Span, TraceLog, Tracer,
-                       build_ledger, render_report)
+from repro.obs import (NULL_TRACER, DeviceSpec, ObsServer, RooflineManager,
+                       Span, TraceLog, Tracer, align_counters, build_ledger,
+                       dc_window_counters, predict_block_bt, render_report)
 from repro.obs.attrib import PARALLEL_STAGES, STAGE_ORDER
 from repro.serve.metrics import Histogram, Metrics
 
@@ -257,3 +258,223 @@ def test_metrics_snapshot_is_flat_and_consistent():
     assert snap["c"] == 3 and snap["g"] == 2.5
     assert snap["h_count"] == 1 and snap["h_p50"] <= snap["h_p99"]
     assert "c 3" in m.render()
+
+
+# ---------------------------------------------------------------- counters --
+def test_counter_events_export_as_perfetto_C_and_parse(tmp_path):
+    tr = Tracer()
+    tr.counter("kernel/lax/cap160", word_ops=100.0, hbm_bytes=400.0)
+    tr.counter("kernel/lax/cap160", word_ops=250.0, hbm_bytes=900.0)
+    path = tmp_path / "trace.json"
+    tr.log.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    cs = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert len(cs) == 2
+    for e in cs:
+        assert e["name"] == "kernel/lax/cap160"
+        assert set(e["args"]) == {"word_ops", "hbm_bytes"}
+    # cumulative samples are monotone in both series and in time
+    assert cs[0]["ts"] <= cs[1]["ts"]
+    assert cs[0]["args"]["word_ops"] < cs[1]["args"]["word_ops"]
+    assert cs[0]["args"]["hbm_bytes"] < cs[1]["args"]["hbm_bytes"]
+
+
+def test_disabled_tracer_counter_records_nothing():
+    tr = Tracer(enabled=False)
+    tr.counter("kernel/x", word_ops=1.0)
+    assert tr.log.spans() == []
+
+
+# ---------------------------------------------------------------- roofline --
+def test_dc_window_counters_hand_counted_tiny_case():
+    # w=32 (one word), k=2: 32 text steps x 3 distance rows x 6 ops/cell
+    c = dc_window_counters(32, 2)
+    assert c["nw"] == 1
+    assert c["word_ops"] == 32 * 3 * 6
+    # M/I/D store: one u32 word per (step, row, vector)
+    assert c["tb_bytes"] == 32 * 3 * 3 * 4
+    # R-only store: one u32 word per (step incl. boundary, row)
+    assert dc_window_counters(32, 2, store="r")["tb_bytes"] == 33 * 3 * 4
+    with pytest.raises(ValueError):
+        dc_window_counters(33, 2)  # not a word multiple
+    with pytest.raises(ValueError):
+        dc_window_counters(32, 2, store="nope")
+
+
+def test_align_counters_hand_counted_launch_structure():
+    # cap=64, w=32, o=8: commit 24 -> ceil(64/24)+2 = 5 windows;
+    # batch 8 @ block 8 -> 1 grid step/window -> 5 launches
+    c = align_counters("pallas_dc", 64, 2, 8, w=32, o=8, block_bt=8)
+    assert c.launches == 5 and c.exact
+    assert c.word_ops == 5 * 8 * (32 * 3 * 6)
+    assert c.tb_bytes == 5 * 8 * (32 * 3 * 3 * 4)
+    # io: per window-lane, text+pattern tiles (2w int8) + d_min (4B)
+    assert c.hbm_bytes == c.tb_bytes + 5 * 8 * (2 * 32 + 4)
+    # v2's R-only store is ~3x less TB traffic at equal ops
+    v2 = align_counters("pallas_dc_v2", 64, 2, 8, w=32, o=8, block_bt=8)
+    assert v2.word_ops == c.word_ops
+    assert v2.tb_bytes < c.tb_bytes / 2.5
+    # padding counts: batch 9 pads to 16 at block 8 -> 2 launches/window
+    p = align_counters("pallas_dc", 64, 2, 9, w=32, o=8, block_bt=8)
+    assert p.launches == 10
+    assert p.word_ops == 2 * c.word_ops
+    # ref is an estimate, flagged as such
+    assert not align_counters("ref", 64, 2, 8).exact
+    with pytest.raises(KeyError):
+        align_counters("mystery_backend", 64, 2, 8)
+
+
+def test_device_spec_load_and_roof():
+    spec = DeviceSpec.load("tpu_v5e")
+    assert spec.peak_flops == pytest.approx(197e12)
+    assert spec.hbm_bw == pytest.approx(819e9)
+    # roofline: bandwidth-bound below the ridge, compute-bound above
+    ridge = spec.peak_word_ops / spec.hbm_bw
+    assert spec.roof_ops_per_s(ridge / 10) == pytest.approx(
+        ridge / 10 * spec.hbm_bw)
+    assert spec.roof_ops_per_s(ridge * 10) == spec.peak_word_ops
+    with pytest.raises(ValueError):
+        DeviceSpec.load("no_such_device")
+    for name in ("gpu_generic", "cpu_host"):
+        assert DeviceSpec.load(name).peak_word_ops > 0
+
+
+def test_predict_block_bt_prefers_fewer_launches_under_overhead():
+    # launch overhead dominates at tiny work sizes -> pick the largest
+    # tile that fits the batch (one launch per window)
+    slow_launch = DeviceSpec(name="x", peak_flops=1e15, peak_word_ops=1e15,
+                             hbm_bw=1e15, launch_overhead_s=1.0)
+    assert predict_block_bt("pallas_dc", 160, 8, 64,
+                            spec=slow_launch) == 64
+    # zero overhead + padding waste: batch 40 at block 64 pads 24 lanes,
+    # block 8 pads none -> the model must not pick the padded tile
+    no_overhead = DeviceSpec(name="y", peak_flops=1e12, peak_word_ops=1e12,
+                             hbm_bw=1e12, launch_overhead_s=0.0)
+    bt = predict_block_bt("pallas_dc", 160, 8, 40, spec=no_overhead)
+    assert 40 % bt == 0
+
+
+def test_roofline_manager_records_and_reports():
+    m = Metrics()
+    tr = Tracer()
+    rf = RooflineManager(spec=DeviceSpec.load("cpu_host"), metrics=m,
+                         tracer=tr, measure=False)
+    for _ in range(3):
+        rf.record_flush("lax", 160, 24, 16, align_s=0.01)
+    rep = rf.report()
+    assert rep["device_spec"]["name"] == "cpu_host"
+    (row,) = rep["kernels"]
+    assert row["kernel"] == "lax/cap160" and row["calls"] == 3
+    for key in ("analytic_ops", "measured_ops", "bytes", "intensity",
+                "pct_of_roof"):
+        assert key in row
+    assert row["analytic_ops"] > 0 and 0 < row["pct_of_roof"] < 1
+    assert row["achieved_ops_per_s"] == pytest.approx(
+        row["analytic_ops"] * 3 / 0.03)
+    # counters land in the Metrics registry, cumulatively
+    snap = m.snapshot()
+    assert snap["kernel_lax_cap160_word_ops"] == pytest.approx(
+        row["analytic_ops"] * 3)
+    assert snap["kernel_lax_cap160_launches"] >= 0
+    # ...and as monotone Perfetto counter samples
+    cs = [s for s in tr.log.spans() if s.kind == "counter"]
+    assert len(cs) == 3
+    vals = [s.attrs["word_ops"] for s in cs]
+    assert vals == sorted(vals) and vals[0] < vals[-1]
+
+
+def test_roofline_manager_disabled_is_noop_and_unknown_backend_skipped():
+    rf = RooflineManager(spec=DeviceSpec.load("cpu_host"), enabled=False,
+                         measure=False)
+    assert rf.record_flush("lax", 160, 24, 16, align_s=0.01) is None
+    assert rf.report()["kernels"] == []
+    rf.enabled = True
+    assert rf.record_flush("graph_lax", 160, 24, 16, align_s=0.01) is None
+    assert rf.report()["kernels"] == []
+
+
+def test_roofline_measured_side_cost_analysis():
+    rf = RooflineManager(spec=DeviceSpec.load("cpu_host"))
+    rf.record_flush("lax", 64, 8, 8, align_s=0.005)
+    (row,) = rf.report(measure=True)["kernels"]
+    assert row["measure_error"] is None
+    # XLA's CPU cost model sees only the float residue of the integer
+    # DC program (DESIGN.md par. 13): demand presence and rough scale,
+    # not agreement
+    assert row["measured_ops"] is not None
+    assert row["measured_bytes"] is not None and row["measured_bytes"] > 0
+    # the analytic/measured ops ratio stays within the documented band
+    assert row["analytic_ops"] / max(row["measured_ops"], 1.0) < 1024
+
+
+# ------------------------------------------------------- engine integration --
+def test_serve_engine_roofline_integration():
+    import numpy as np
+
+    from repro.core import minimizer_index
+    from repro.serve import EngineConfig, ServeEngine
+
+    rng = np.random.default_rng(5)
+    ref = rng.integers(0, 4, size=2000).astype(np.int8)
+    index = minimizer_index.build_epoched_index(ref, w=8, k=12)
+    reads = [ref[i:i + 100].copy() for i in (50, 400, 900, 1300)]
+    tr = Tracer()
+    rf = RooflineManager(spec=DeviceSpec.load("cpu_host"), tracer=tr,
+                         measure=False)
+    cfg = EngineConfig(buckets=(128,), max_batch=4, minimizer_w=8,
+                       minimizer_k=12)
+    with ServeEngine(index, cfg, tracer=tr, roofline=rf) as eng:
+        eng.map_all(reads)
+        backend = eng.align_backend
+    rows = rf.report(measure=False)["kernels"]
+    assert rows and rows[0]["kernel"] == f"{backend}/cap128"
+    assert rows[0]["calls"] >= 1 and rows[0]["align_s"] > 0
+    # the align span carries the counters for per-stage attribution
+    aligns = [s for s in tr.log.spans() if s.name == "align"]
+    assert aligns and aligns[0].attrs["word_ops"] == rows[0]["analytic_ops"]
+    rep = build_ledger(tr.log).report()
+    arow = next(r for r in rep.stages if r["stage"] == "align")
+    assert arow["word_ops"] == pytest.approx(
+        rows[0]["analytic_ops"] * rows[0]["calls"])
+    assert arow["ops_per_s"] > 0 and arow["intensity"] > 0
+
+
+# ------------------------------------------------------------- http extras --
+def test_trace_endpoint_bad_n_is_400_and_large_n_clamps():
+    tr = Tracer(log=TraceLog(max_spans=8))
+    for _ in range(12):
+        with tr.span("flush"):
+            pass
+    with ObsServer(tracer=tr, port=0) as srv:
+        for bad in ("foo", "-5", "1.5", ""):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url + f"/trace?n={bad}")
+            assert ei.value.code == 400
+        # n beyond the ring clamps to the ring size instead of erroring
+        code, body = _get(srv.url + "/trace?n=999999999")
+        assert code == 200
+        assert len(json.loads(body)["spans"]) == 8
+
+
+def test_roofline_endpoint_serves_kernel_rows():
+    rf = RooflineManager(spec=DeviceSpec.load("cpu_host"), measure=False)
+    rf.record_flush("lax", 160, 24, 16, align_s=0.02)
+    rf.record_flush("lax", 320, 24, 16, align_s=0.04)
+    with ObsServer(roofline=rf, port=0) as srv:
+        code, body = _get(srv.url + "/roofline?measure=0")
+        assert code == 200
+        doc = json.loads(body)
+        assert doc["device_spec"]["name"] == "cpu_host"
+        kernels = {r["kernel"] for r in doc["kernels"]}
+        assert kernels == {"lax/cap160", "lax/cap320"}
+        for r in doc["kernels"]:
+            for key in ("analytic_ops", "measured_ops", "bytes",
+                        "intensity", "pct_of_roof"):
+                assert key in r
+
+
+def test_roofline_endpoint_404_when_unattached():
+    with ObsServer(port=0) as srv:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/roofline")
+        assert ei.value.code == 404

@@ -5,7 +5,11 @@ key containing that substring, at any nesting depth) in the current
 ``bench_summary.json`` against the anchor committed with the PR that
 last touched performance (``BENCH_PR*.json``).  A key regressing below
 ``factor`` × anchor fails the build; keys present in only one file are
-reported but never fail (benchmarks come and go across PRs).
+reported but never fail (benchmarks come and go across PRs) — *unless*
+the two files share **zero** throughput keys, which means the summary
+schema drifted out from under the anchor and the gate would otherwise
+silently stop gating anything: that exits non-zero (code 2) until the
+anchor is refreshed.
 
 The default factor 0.85 tolerates runner-to-runner noise (GitHub
 machines vary run to run) while catching the >15% regressions a serving
@@ -41,9 +45,16 @@ def collect(node, prefix: str = "") -> dict[str, float]:
     return out
 
 
-def gate(current: dict, anchor: dict, factor: float) -> tuple[list, list]:
-    """Return (failures, report_lines) for every shared throughput key."""
+def gate(current: dict, anchor: dict, factor: float
+         ) -> tuple[list, list, int]:
+    """Return (failures, report_lines, n_shared) over the throughput keys.
+
+    ``n_shared`` is the count of ``reads_per_s`` keys present in *both*
+    trees — zero means schema drift and the caller must fail loudly
+    rather than pass an empty comparison.
+    """
     cur, ref = collect(current), collect(anchor)
+    n_shared = len(set(cur) & set(ref))
     failures, lines = [], []
     for key in sorted(ref):
         if key not in cur:
@@ -58,7 +69,7 @@ def gate(current: dict, anchor: dict, factor: float) -> tuple[list, list]:
             failures.append((key, r, c, ratio))
     for key in sorted(set(cur) - set(ref)):
         lines.append(f"  {key}: new key ({cur[key]:.2f}), skipped")
-    return failures, lines
+    return failures, lines, n_shared
 
 
 def main(argv=None) -> int:
@@ -81,10 +92,16 @@ def main(argv=None) -> int:
     with open(args.anchor) as f:
         anchor = json.load(f)
 
-    failures, lines = gate(current, anchor, args.factor)
+    failures, lines, n_shared = gate(current, anchor, args.factor)
     print(f"bench gate: {args.current} vs {args.anchor} "
           f"(factor {args.factor})")
     print("\n".join(lines))
+    if n_shared == 0:
+        print("bench gate: FAILED — current summary and anchor share zero "
+              "reads_per_s keys (schema drift?); nothing was actually "
+              "compared. Refresh the anchor (BENCH_PR*.json) to match the "
+              "current bench_summary.json layout.")
+        return 2
     if failures:
         print(f"bench gate: {len(failures)} key(s) regressed below "
               f"{args.factor:.0%} of anchor:")

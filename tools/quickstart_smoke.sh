@@ -48,7 +48,45 @@ python - "$OUT/trace.json" <<'EOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
 assert any(e.get("name") == "flush" for e in doc["traceEvents"])
+assert any(e.get("ph") == "C" for e in doc["traceEvents"]), \
+    "no per-kernel counter samples in the trace"
 print(f"trace.json: {len(doc['traceEvents'])} events")
+EOF
+
+echo "== /roofline endpoint (per-kernel counters over a live engine)"
+python - <<'EOF'
+import json
+import urllib.request
+
+import numpy as np
+
+from repro.core import minimizer_index
+from repro.obs import ObsServer, RooflineManager, Tracer
+from repro.serve import EngineConfig, ServeEngine
+
+rng = np.random.default_rng(11)
+ref = rng.integers(0, 4, size=4000).astype(np.int8)
+index = minimizer_index.build_epoched_index(ref, w=8, k=12)
+tracer = Tracer()
+roofline = RooflineManager(tracer=tracer)
+cfg = EngineConfig(buckets=(128,), max_batch=4, minimizer_w=8,
+                   minimizer_k=12)
+with ServeEngine(index, cfg, tracer=tracer, roofline=roofline) as eng:
+    roofline.metrics = eng.metrics
+    eng.map_all([ref[i:i + 100].copy() for i in (60, 800, 2000, 3100)])
+    with ObsServer(metrics=eng.metrics, tracer=tracer,
+                   roofline=roofline, port=0) as srv:
+        with urllib.request.urlopen(srv.url + "/roofline", timeout=60) as r:
+            doc = json.loads(r.read())
+rows = doc["kernels"]
+assert rows, "no kernel dispatch sites recorded"
+for row in rows:
+    for key in ("analytic_ops", "measured_ops", "bytes", "intensity",
+                "pct_of_roof"):
+        assert key in row, f"missing {key} in /roofline row"
+    assert row["measure_error"] is None, row["measure_error"]
+print(f"/roofline: {len(rows)} kernel site(s), "
+      f"device spec {doc['device_spec']['name']}")
 EOF
 
 echo "quickstart smoke: all README commands ran"

@@ -1,15 +1,29 @@
 """Reference-sharding throughput: reads/s vs 1/2/4 host-platform shards.
 
 Measures bucket-executor mapping throughput (engine admission excluded)
-at a *filter-dominated* operating point — a large per-read candidate
-budget, the high-sensitivity regime the paper's GenASM-DC pre-alignment
-filter exists for (§4.10.3: many candidate locations per read).  At 1
-shard the whole seed/vote/filter stage serializes on one device; at N
-shards each device filters ``candidates / N`` of the budget over its
-slice of the reference in parallel (``shard_map`` scatter), the host
-merges winners, and one batched align call finishes — so the filter
-stage strong-scales while the align stage is the Amdahl floor (sharded
-and single paths run the identical align program).
+at two operating points:
+
+* **filter-dominated** (the default/top-level numbers) — a large
+  per-read candidate budget, the high-sensitivity regime the paper's
+  GenASM-DC pre-alignment filter exists for (§4.10.3: many candidate
+  locations per read).  The scatter stage strong-scales with shards.
+* **align-dominated** (``align_point``) — long reads at a long bucket
+  cap with a small candidate budget, where the winning-window align
+  stage is most of the batch and the old single-device align was the
+  Amdahl floor.
+
+Each sharded row reports four modes so the win decomposes:
+
+* ``reads_per_s_host_merge`` — the pre-device-merge path (per-shard
+  winners synced to the host, lexicographic merge in numpy, align
+  re-dispatched): the historical Amdahl floor.
+* ``reads_per_s`` — packed-key argmin merge on device (winners never
+  visit the host between scatter and align).
+* ``reads_per_s_align_sharded`` — device merge plus the align stage
+  mesh-split over the same shards.
+* ``reads_per_s_pipelined`` — device merge + sharded align dispatched
+  through ``start``/``finish`` double-buffering, batch i's align
+  overlapping batch i+1's scatter.
 
 Needs ``jax.device_count() >= 4``; when launched with fewer devices it
 re-execs itself in a subprocess with
@@ -82,34 +96,84 @@ def _measure(*, ref_len, n_reads, read_len, p_cap, candidates, reps, seed):
             def call(ex=ex):
                 return jax.tree_util.tree_map(
                     np.asarray, ex(epi.index, jarr, jlens))
-        else:
-            esi = shard.from_epoched(epi, s)
-            ex = shard.ShardedMapExecutor(
-                esi.index, cfg=cfg,
-                shard_candidates=max(1, candidates // s),
-                backend="lax", **common)
-            arrays = esi.index.arrays
 
-            def call(ex=ex, arrays=arrays):
-                return ex(arrays, arr, lens)
+            res, dt, stages = timed(call, ex)
+            out["1"] = {
+                "reads_per_s": round(n_reads / dt, 2),
+                "ms_per_batch": round(dt * 1e3, 2),
+                "mapped": int((res.position >= 0).sum()),
+                "spmd": False,
+                "stages": stages,
+            }
+            continue
 
-        res, dt, stages = timed(call, ex)
+        esi = shard.from_epoched(epi, s)
+        arrays = esi.index.arrays
+        kw = dict(cfg=cfg, shard_candidates=max(1, candidates // s),
+                  backend="lax", **common)
+        ex = shard.ShardedMapExecutor(esi.index, **kw)
+        res, dt, stages = timed(lambda: ex(arrays, arr, lens), ex)
+
+        # the pre-device-merge reference: per-shard winners synced to
+        # the host, numpy lexicographic merge, align re-dispatched —
+        # what the serve path did before the packed-key argmin
+        def host_call():
+            st = ex.stage(arrays, arr, lens)
+            fd, pos, text, t_len, _win = ex.merge_host(st)
+            r = ex._align(jnp.asarray(text), jnp.asarray(arr),
+                          jnp.asarray(lens, jnp.int32),
+                          jnp.asarray(t_len), jnp.asarray(pos),
+                          jnp.asarray(fd))
+            return jax.tree_util.tree_map(np.asarray, r)
+
+        res_host, dt_host, _ = timed(host_call, None)
+
+        ex_as = shard.ShardedMapExecutor(esi.index, align_sharded=True,
+                                         **kw)
+        res_as, dt_as, _ = timed(lambda: ex_as(arrays, arr, lens), ex_as)
+
+        # double-buffered stream: batch i's align overlaps batch i+1's
+        # scatter (the serve engine's pipelined mode, minus admission)
+        t0 = time.perf_counter()
+        pending = ex_as.start(arrays, arr, lens, timed=False)
+        for _ in range(reps - 1):
+            nxt = ex_as.start(arrays, arr, lens, timed=False)
+            ex_as.finish(pending)
+            pending = nxt
+        res_pipe = ex_as.finish(pending)[0]
+        dt_pipe = (time.perf_counter() - t0) / reps
+
+        for r in (res_host, res_as, res_pipe):  # modes are re-schedulings
+            assert (np.asarray(r.position) == np.asarray(res.position)).all()
+
         out[str(s)] = {
             "reads_per_s": round(n_reads / dt, 2),
+            "reads_per_s_host_merge": round(n_reads / dt_host, 2),
+            "reads_per_s_align_sharded": round(n_reads / dt_as, 2),
+            "reads_per_s_pipelined": round(n_reads / dt_pipe, 2),
             "ms_per_batch": round(dt * 1e3, 2),
             "mapped": int((res.position >= 0).sum()),
-            "spmd": bool(s > 1 and jax.device_count() >= s),
+            "spmd": bool(jax.device_count() >= s),
             "stages": stages,  # avg s/batch: scatter strong-scales,
         }                      # merge+align are the Amdahl floor
+    base = out["1"]["reads_per_s"]
     return {
         "ref_len": ref_len, "n_reads": n_reads, "read_len": read_len,
         "p_cap": p_cap, "candidates": candidates, "reps": reps,
         "seed": seed, "devices": jax.device_count(),
         "shards": out,
         "speedup_2shards_vs_1": round(
-            out["2"]["reads_per_s"] / out["1"]["reads_per_s"], 3),
+            out["2"]["reads_per_s"] / base, 3),
         "speedup_4shards_vs_1": round(
-            out["4"]["reads_per_s"] / out["1"]["reads_per_s"], 3),
+            out["4"]["reads_per_s"] / base, 3),
+        "speedup_4shards_pipelined_vs_1": round(
+            out["4"]["reads_per_s_pipelined"] / base, 3),
+        "device_merge_win_4shards": round(
+            out["4"]["reads_per_s"] / out["4"]["reads_per_s_host_merge"],
+            3),
+        "pipeline_win_4shards": round(
+            out["4"]["reads_per_s_pipelined"] / out["4"]["reads_per_s"],
+            3),
     }
 
 
@@ -148,9 +212,13 @@ def main(argv=None):
     if args.smoke:
         params = dict(ref_len=160_000, n_reads=32, read_len=100, p_cap=128,
                       candidates=64, reps=4)
+        align_params = dict(ref_len=120_000, n_reads=8, read_len=350,
+                            p_cap=384, candidates=8, reps=2)
     else:
         params = dict(ref_len=1_000_000, n_reads=64, read_len=100, p_cap=128,
                       candidates=64, reps=8)
+        align_params = dict(ref_len=400_000, n_reads=16, read_len=450,
+                            p_cap=512, candidates=8, reps=4)
 
     if not args.no_respawn and _needs_respawn():
         import tempfile
@@ -168,6 +236,9 @@ def main(argv=None):
                 os.unlink(json_path)
     else:
         out = _measure(seed=args.seed, **params)
+        # align-dominated point: long reads/caps, small candidate
+        # budget — where the sharded/pipelined align stage must win
+        out["align_point"] = _measure(seed=args.seed + 1, **align_params)
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(out, f, indent=2)
@@ -182,7 +253,17 @@ def main(argv=None):
             f"spmd={r['spmd']}")
     row("shard_scaling_speedup", 0.0,
         f"4shards_vs_1={out['speedup_4shards_vs_1']}x;"
-        f"2shards_vs_1={out['speedup_2shards_vs_1']}x")
+        f"2shards_vs_1={out['speedup_2shards_vs_1']}x;"
+        f"pipelined_4_vs_1={out['speedup_4shards_pipelined_vs_1']}x")
+    row("shard_scaling_merge", 0.0,
+        f"device_merge_win_4shards={out['device_merge_win_4shards']}x;"
+        f"pipeline_win_4shards={out['pipeline_win_4shards']}x")
+    ap4 = out["align_point"]["shards"]["4"]
+    row("shard_scaling_align_point", 0.0,
+        f"reads_per_s={ap4['reads_per_s']};"
+        f"align_sharded={ap4['reads_per_s_align_sharded']};"
+        f"pipelined={ap4['reads_per_s_pipelined']};"
+        f"host_merge={ap4['reads_per_s_host_merge']}")
     return out
 
 

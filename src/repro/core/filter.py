@@ -24,6 +24,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .bitvector import SENTINEL, WILDCARD
 from .genasm_dc import bitap_search
@@ -32,7 +33,10 @@ from .segram.minimizer import hash32, kmer_codes
 QGRAM_Q = 8  # q-gram width of the tile screen (2-bit packed, 16 bits)
 BLOOM_BITS = 4096  # per-tile Bloom width: 128 uint32 words
 BLOOM_WORDS = BLOOM_BITS // 32
-_INVALID = jnp.uint32(0xFFFFFFFF)
+# numpy, not jnp: a device constant here would initialize the jax
+# backend at import time, locking the device count before test/launch
+# code can set XLA_FLAGS (e.g. forced host-device meshes).
+_INVALID = np.uint32(0xFFFFFFFF)
 
 
 def qgram_codes(seq: jnp.ndarray, q: int = QGRAM_Q) -> jnp.ndarray:

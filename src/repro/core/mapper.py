@@ -17,6 +17,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .bitvector import SENTINEL, WILDCARD
 from .genasm import GenASMConfig
@@ -42,7 +43,10 @@ class SeedFilterResult(NamedTuple):
     text: jnp.ndarray  # [t_cap] int8 reference region at position
     t_len: jnp.ndarray  # int32 valid text length
     pattern: jnp.ndarray  # [p_cap] int8 wildcard-padded read
-    distance: jnp.ndarray = jnp.int32(0)  # int32 winning filter distance
+    # numpy default, not jnp: a device constant in the class body would
+    # initialize the jax backend at module import, locking the device
+    # count before XLA_FLAGS-based host-device forcing can apply.
+    distance: jnp.ndarray = np.int32(0)  # int32 winning filter distance
 
 
 def lex_best(fd: jnp.ndarray, fpos: jnp.ndarray) -> jnp.ndarray:

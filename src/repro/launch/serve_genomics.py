@@ -151,6 +151,14 @@ def main(argv=None):
                          "execution with identical output when fewer "
                          "devices exist); PAF/GAF is byte-identical to "
                          "--num-shards 1")
+    ap.add_argument("--align-sharded", action="store_true",
+                    help="with --num-shards > 1: split the winning-window "
+                         "align stage over the shard mesh too "
+                         "(byte-identical output)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="with --num-shards > 1: double-buffer flushes — "
+                         "overlap batch i's align with batch i+1's "
+                         "scatter dispatch (byte-identical output)")
     ap.add_argument("--online", action="store_true",
                     help="open-loop Poisson arrivals instead of the "
                          "offline work-queue drain")
@@ -211,6 +219,8 @@ def main(argv=None):
         workload=args.mode,
         filter_k=max(8, int(args.read_len * prof.error_rate * 1.5)),
         num_shards=args.num_shards,
+        align_sharded=args.align_sharded,
+        pipelined=args.pipelined,
         minimizer_w=8, minimizer_k=12)
 
     pi, pc = jax.process_index(), jax.process_count()

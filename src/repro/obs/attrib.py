@@ -10,8 +10,10 @@ per canonical pipeline stage —
     prefilter      graph seed + q-gram tile screen (no DC)
     dc_filter      graph BitAlign-DC over the compacted candidate rows
     scatter        sharded per-shard seed+filter stage
-    merge          host lexicographic merge of per-shard winners
+    merge          host lexicographic merge of per-shard winners (legacy)
+    merge_device   packed-key argmin-reduce of shard winners on device
     align          windowed GenASM/BitAlign alignment of the winners
+    align_shard    the same align stage sharded over the shard mesh
     emit           result materialization, cache put, future resolution
     other          flush time not covered by any child stage span
 
@@ -39,14 +41,17 @@ from .trace import Span, TraceLog
 
 # canonical stage order (pipeline position, not size)
 STAGE_ORDER = ("enqueue_wait", "encode", "seed_filter", "prefilter",
-               "dc_filter", "scatter", "merge", "align", "emit", "other")
+               "dc_filter", "scatter", "merge", "merge_device", "align",
+               "align_shard", "emit", "other")
 _STAGE_SET = frozenset(STAGE_ORDER)
 
 # stages whose current implementation already scales with shards; the
 # rest (host merge, serial align launch, host emit, …) are the measured
-# serial fraction sharding cannot touch until they are redesigned
+# serial fraction sharding cannot touch until they are redesigned.
+# merge_device/align_shard are the PR-10 device-resident replacements
+# for the serial host merge and serial align launch.
 PARALLEL_STAGES = frozenset({"seed_filter", "prefilter", "dc_filter",
-                             "scatter"})
+                             "scatter", "merge_device", "align_shard"})
 
 
 def _quantile(sorted_durs: list[float], q: float) -> float:

@@ -88,6 +88,14 @@ class EngineConfig:
     its owning shard — automatic for real reads at the default budget;
     see the `repro.shard.mapper` caveat before shrinking it on highly
     repetitive references.
+
+    ``align_sharded`` (sharded serving only) splits the winning-window
+    align stage over the same shard mesh as the scatter stage;
+    ``pipelined`` dispatches each flush through the executors'
+    non-blocking ``start``/``finish`` surface and overlaps batch *i*'s
+    align with batch *i+1*'s scatter (double buffering, one batch in
+    flight).  Both are bitwise-neutral on output and part of the
+    executor-cache key.
     """
 
     buckets: tuple[int, ...] = (160, 320, 640, 1280)
@@ -109,6 +117,9 @@ class EngineConfig:
     # graph workload: q-gram tile screen before the BitAlign-DC filter
     # (bitwise-neutral on output; off only for A/B measurement)
     graph_prefilter: bool = True
+    # sharded serving: mesh-split align stage / double-buffered flushes
+    align_sharded: bool = False
+    pipelined: bool = False
 
     def __post_init__(self):
         if not self.buckets:
@@ -127,6 +138,10 @@ class EngineConfig:
         if self.shard_candidates is not None and self.shard_candidates < 1:
             raise ValueError(f"shard_candidates must be >= 1, got "
                              f"{self.shard_candidates}")
+        if (self.align_sharded or self.pipelined) and self.num_shards < 2:
+            raise ValueError(
+                "align_sharded/pipelined serve through the repro.shard "
+                "executors; they need num_shards > 1")
         object.__setattr__(self, "buckets", tuple(sorted(set(self.buckets))))
 
     def bucket_for(self, length: int) -> int:
@@ -161,6 +176,18 @@ class _Request:
     t_submit: float = field(default_factory=time.monotonic)
 
 
+class _PendingFlush(NamedTuple):
+    """One dispatched-but-unmaterialized flush (pipelined mode)."""
+
+    cap: int
+    reqs: list
+    fn: object  # the sharded executor that dispatched it
+    pending: object  # its shard.PendingBatch
+    epoch: object
+    lens: np.ndarray
+    t_flush: float
+
+
 class ServeEngine:
     """Admission queue + per-bucket micro-batcher over `mapper.map_batch`."""
 
@@ -168,7 +195,8 @@ class ServeEngine:
                  config: EngineConfig = EngineConfig(),
                  metrics: Metrics | None = None,
                  tracer: Tracer | None = None,
-                 roofline=None):
+                 roofline=None,
+                 clock=time.monotonic):
         self.config = config
         # NULL_TRACER's span()/add()/event() are near-free no-ops, so the
         # untraced hot path stays untaxed (ISSUE: <3% overhead traced)
@@ -176,6 +204,11 @@ class ServeEngine:
         # optional repro.obs.roofline.RooflineManager: per-flush analytic
         # kernel counters keyed by this engine's align dispatch sites
         self.roofline = roofline
+        # every deadline/latency decision reads this clock, so tests can
+        # inject a fake monotonic clock and assert flush policy without
+        # real sleeps (the worker still polls it every <=50 ms of real
+        # time while reads wait)
+        self._clock = clock
 
         def check_minimizer(kw):
             if (kw["w"], kw["k"]) != (config.minimizer_w, config.minimizer_k):
@@ -228,6 +261,7 @@ class ServeEngine:
         self.trace_counts: dict[int, int] = {}
         self._cv = threading.Condition()
         self._inflight = 0
+        self._pending: _PendingFlush | None = None  # pipelined: one in flight
         self._closed = False
         self._error: BaseException | None = None
         self._worker = threading.Thread(
@@ -316,7 +350,7 @@ class ServeEngine:
         """Admit one read; the future resolves to a ``ServeResult``."""
         read = np.ascontiguousarray(read, dtype=np.int8)
         fut: Future = Future()
-        t0 = time.monotonic()
+        t0 = self._clock()
         with self._cv:  # a dead engine answers nothing, not even cache hits
             if self._closed:
                 raise RuntimeError("engine is closed")
@@ -332,7 +366,7 @@ class ServeEngine:
             fut.set_result(hit._replace(
                 cached=True, ops=hit.ops.copy(),  # callers own their arrays
                 path=None if hit.path is None else hit.path.copy(),
-                latency_s=time.monotonic() - t0))
+                latency_s=self._clock() - t0))
             return fut
         req = _Request(read=read, length=len(read),
                        bucket=self.config.bucket_for(len(read)), future=fut,
@@ -361,11 +395,11 @@ class ServeEngine:
 
     def drain(self, timeout: float | None = None) -> None:
         """Block until every admitted read has a result."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         with self._cv:
             while self._inflight > 0 and self._error is None:
                 wait = (None if deadline is None
-                        else max(deadline - time.monotonic(), 0.0))
+                        else max(deadline - self._clock(), 0.0))
                 if wait == 0.0:
                     raise TimeoutError(
                         f"drain timed out with {self._inflight} in flight")
@@ -400,7 +434,7 @@ class ServeEngine:
                 min(c.filter_bits, cap), c.filter_k, c.max_candidates,
                 c.num_shards, c.shard_candidates,
                 c.minimizer_w, c.minimizer_k, c.max_batch, geom,
-                c.graph_prefilter)
+                c.graph_prefilter, c.align_sharded, c.pipelined)
 
     def _count_trace(self, cap: int, stage=None) -> None:
         """Executor-body hook: runs at trace time only → counts retraces.
@@ -456,6 +490,7 @@ class ServeEngine:
                     filter_bits=fbits, filter_k=c.filter_k,
                     shard_candidates=n_cand, backend=backend,
                     prefilter=c.graph_prefilter,
+                    align_sharded=c.align_sharded,
                     trace_hook=partial(self._count_trace, cap))
             elif c.num_shards > 1:
                 from repro.shard import ShardedMapExecutor
@@ -464,6 +499,7 @@ class ServeEngine:
                     sharded_index, cfg=c.genasm, p_cap=cap,
                     filter_bits=fbits, filter_k=c.filter_k,
                     shard_candidates=n_cand, backend=backend,
+                    align_sharded=c.align_sharded,
                     trace_hook=partial(self._count_trace, cap))
             elif c.workload == "graph":
                 from repro.graph.mapper import GraphMapExecutor
@@ -535,18 +571,40 @@ class ServeEngine:
         picked: tuple[int, list[_Request]] | None = None
         try:
             while True:
+                action = "stop"
                 with self._cv:
                     while True:
                         if self._closed and not any(self._queues.values()):
-                            return
-                        now = time.monotonic()
+                            action = "stop"
+                            break
+                        now = self._clock()
                         picked = self._flush_candidate(now)
                         if picked is not None:
+                            action = "exec"
                             break
-                        self._cv.wait(timeout=self._next_deadline(now) or 0.05)
+                        if self._pending is not None:
+                            # idle queue: materialize the in-flight batch
+                            # rather than sitting on its futures
+                            action = "finish"
+                            break
+                        wait = self._next_deadline(now)
+                        # cap the sleep so an injected fake clock (tests)
+                        # is re-polled every <=50 ms of real time
+                        self._cv.wait(timeout=0.05 if wait is None
+                                      else min(wait, 0.05))
                     self.metrics.gauge("queue_depth").set(
                         sum(len(q) for q in self._queues.values()))
-                self._execute(*picked)  # compute outside the lock
+                if action == "stop":
+                    self._finish_pending()
+                    return
+                if action == "finish":
+                    self._finish_pending()
+                    continue
+                cap, reqs = picked  # compute outside the lock
+                if self.config.pipelined:
+                    self._execute_pipelined(cap, reqs)
+                else:
+                    self._execute(cap, reqs)
                 picked = None
         except BaseException as e:  # noqa: BLE001 — worker must not die silently
             with self._cv:
@@ -554,6 +612,9 @@ class ServeEngine:
                 failed = [r for q in self._queues.values() for r in q]
                 if picked is not None:  # the batch mid-execute fails too
                     failed += picked[1]
+                if self._pending is not None:  # and the dispatched one
+                    failed += self._pending.reqs
+                    self._pending = None
                 for q in self._queues.values():
                     q.clear()
                 for r in failed:
@@ -562,10 +623,109 @@ class ServeEngine:
                 self._inflight = 0
                 self._cv.notify_all()
 
+    def _execute_pipelined(self, cap: int, reqs: list[_Request]) -> None:
+        """Dispatch a flush without materializing it; finish the previous.
+
+        Double buffering, one batch deep: batch *i+1*'s encode + scatter
+        + device merge dispatch overlaps batch *i*'s still-running align
+        (the executors' ``start`` surface never syncs between stages).
+        """
+        prev, self._pending = self._pending, None
+        c = self.config
+        try:
+            t_flush = self._clock()
+            index, epoch = self.index.current()
+            fn = self._executor(cap, index.layout_key, sharded_index=index)
+            arr, lens = encode.batch_reads(
+                [r.read for r in reqs]
+                + [np.zeros(0, np.int8)] * (c.max_batch - len(reqs)), cap)
+            pending = fn.start(index.arrays, arr, lens, timed=False)
+            self._pending = _PendingFlush(cap, reqs, fn, pending, epoch,
+                                          lens, t_flush)
+        except BaseException:
+            self._pending = prev  # the worker handler fails prev too
+            raise
+        if prev is not None:
+            self._finish_flush(prev)
+
+    def _finish_pending(self) -> None:
+        prev, self._pending = self._pending, None
+        if prev is not None:
+            self._finish_flush(prev)
+
+    def _finish_flush(self, state: _PendingFlush) -> None:
+        """Materialize a dispatched flush and deliver its results."""
+        c, tr = self.config, self.tracer
+        cap, reqs = state.cap, state.reqs
+        try:
+            with tr.span("flush", bucket_cap=cap, batch=len(reqs),
+                         workload=c.workload, shards=c.num_shards,
+                         pipelined=True):
+                if tr.enabled:
+                    for r in reqs:
+                        tr.add("enqueue_wait", r.t_submit, state.t_flush,
+                               bucket_cap=cap, async_=True)
+                res, times = state.fn.finish(state.pending)
+                state.fn.last_times = list(times)
+                for name, t0, t1, attrs in times:
+                    tr.add(name, t0, t1, bucket_cap=cap, **attrs)
+                self._deliver(cap, reqs, state.epoch, state.lens, res,
+                              getattr(state.pending, "stats", None))
+        except BaseException as e:
+            # this flush's futures die here; the worker handler that
+            # re-raises cannot see them anymore (self._pending is clear)
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            raise
+        with self._cv:
+            self._inflight -= len(reqs)
+            self._cv.notify_all()
+
+    def _deliver(self, cap: int, reqs: list[_Request], epoch, lens, res,
+                 stats) -> None:
+        """Flush tail shared by both modes: metrics, cache, futures."""
+        c, tr, m = self.config, self.tracer, self.metrics
+        pos = np.asarray(res.position)
+        dist = np.asarray(res.distance)
+        ops = np.asarray(res.ops)
+        n_ops = np.asarray(res.n_ops)
+        paths = np.asarray(res.path) if c.workload == "graph" else None
+
+        m.counter("batches_flushed").inc()
+        m.counter(f"batches_flushed_cap{cap}").inc()
+        m.histogram("batch_occupancy", lo=1e-3, hi=1.0).observe(
+            len(reqs) / c.max_batch)
+        real = int(sum(min(r.length, cap) for r in reqs))
+        m.counter("bases_useful").inc(real)
+        m.counter("bases_padded_read").inc(len(reqs) * cap - real)
+        m.counter("bases_padded_slot").inc((c.max_batch - len(reqs)) * cap)
+        if stats:  # graph executors: tile-screen / DC-occupancy
+            for name, v in stats.items():
+                m.counter(f"graph_{name}").inc(int(v))
+
+        with tr.span("emit", bucket_cap=cap):
+            done = self._clock()
+            results = []
+            for i, r in enumerate(reqs):
+                out = ServeResult(
+                    position=int(pos[i]), distance=int(dist[i]),
+                    ops=ops[i].copy(), n_ops=int(n_ops[i]),
+                    read_len=int(lens[i]), bucket_cap=cap,
+                    cached=False, latency_s=done - r.t_submit,
+                    path=None if paths is None else paths[i].copy())
+                self.cache.put(r.read, epoch, out, digest=r.digest)
+                m.histogram("latency_s").observe(out.latency_s)
+                results.append(out)
+            # resolve futures before releasing drain(): a drained
+            # engine has every result observable, not merely computed
+            for r, out in zip(reqs, results):
+                r.future.set_result(out)
+
     def _execute(self, cap: int, reqs: list[_Request]) -> None:
         c = self.config
         tr = self.tracer
-        t_flush = time.monotonic()
+        t_flush = self._clock()
         with tr.span("flush", bucket_cap=cap, batch=len(reqs),
                      workload=c.workload, shards=c.num_shards):
             if tr.enabled:
@@ -593,16 +753,16 @@ class ServeEngine:
             res = fn(payload, arr, lens)
             last_times = getattr(fn, "last_times", ())
             # per-kernel analytic counters: the linear workload's align
-            # stage has an exact op/byte model (graph/sharded executors
-            # have their own launch structure — not modeled yet)
+            # stage has an exact op/byte model, sharded or not — the
+            # mesh split changes the launch layout, not the per-read
+            # op/byte totals (graph executors: not modeled yet)
             kc = None
             rf = self.roofline
-            if (rf is not None and rf.enabled and c.workload == "linear"
-                    and c.num_shards == 1):
+            if rf is not None and rf.enabled and c.workload == "linear":
                 from repro import align as align_dispatch
 
                 align_s = next((t1 - t0 for name, t0, t1, _ in last_times
-                                if name == "align"), None)
+                                if name in ("align", "align_shard")), None)
                 kc = rf.record_flush(
                     self.align_backend, cap, c.genasm.k, c.max_batch,
                     align_s=align_s,
@@ -610,52 +770,16 @@ class ServeEngine:
                         self.align_backend, cap, c.genasm.k, c.max_batch))
             # replay the executor's per-stage monotonic windows as child
             # spans of this flush (seed_filter/prefilter/dc_filter/
-            # scatter/merge/align, with compile/dc_rows/shard attrs; the
-            # align span carries the analytic counters when modeled)
+            # scatter/merge_device/align/align_shard, with compile/
+            # dc_rows/shard attrs; the align span carries the analytic
+            # counters when modeled)
             for name, t0, t1, attrs in last_times:
-                if name == "align" and kc is not None:
+                if name in ("align", "align_shard") and kc is not None:
                     attrs = {**attrs, "word_ops": kc.word_ops,
                              "hbm_bytes": kc.hbm_bytes}
                 tr.add(name, t0, t1, bucket_cap=cap, **attrs)
-            pos = np.asarray(res.position)
-            dist = np.asarray(res.distance)
-            ops = np.asarray(res.ops)
-            n_ops = np.asarray(res.n_ops)
-            paths = (np.asarray(res.path) if c.workload == "graph"
-                     else None)
-
-            m = self.metrics
-            m.counter("batches_flushed").inc()
-            m.counter(f"batches_flushed_cap{cap}").inc()
-            m.histogram("batch_occupancy", lo=1e-3, hi=1.0).observe(
-                len(reqs) / c.max_batch)
-            real = int(sum(min(r.length, cap) for r in reqs))
-            m.counter("bases_useful").inc(real)
-            m.counter("bases_padded_read").inc(len(reqs) * cap - real)
-            m.counter("bases_padded_slot").inc(
-                (c.max_batch - len(reqs)) * cap)
-            stats = getattr(fn, "last_stats", None)
-            if stats:  # graph executors: tile-screen / DC-occupancy
-                for name, v in stats.items():
-                    m.counter(f"graph_{name}").inc(int(v))
-
-            with tr.span("emit", bucket_cap=cap):
-                done = time.monotonic()
-                results = []
-                for i, r in enumerate(reqs):
-                    out = ServeResult(
-                        position=int(pos[i]), distance=int(dist[i]),
-                        ops=ops[i].copy(), n_ops=int(n_ops[i]),
-                        read_len=int(lens[i]), bucket_cap=cap,
-                        cached=False, latency_s=done - r.t_submit,
-                        path=None if paths is None else paths[i].copy())
-                    self.cache.put(r.read, epoch, out, digest=r.digest)
-                    m.histogram("latency_s").observe(out.latency_s)
-                    results.append(out)
-                # resolve futures before releasing drain(): a drained
-                # engine has every result observable, not merely computed
-                for r, out in zip(reqs, results):
-                    r.future.set_result(out)
+            self._deliver(cap, reqs, epoch, lens, res,
+                          getattr(fn, "last_stats", None))
         with self._cv:
             self._inflight -= len(reqs)
             self._cv.notify_all()

@@ -4,30 +4,38 @@ DESIGN.md §11: the reference (linear or variation graph) is cut into
 per-device shards with overlap halos (`partition` / `graph_partition`),
 reads scatter to every shard for independent seeding + GenASM-DC
 filtering under ``shard_map`` (`mapper` / `graph_mapper`), per-shard
-winners merge by a global-coordinate lexicographic rule, and one
-batched ``align_batch`` call finishes the winners.  `failover` routes
-the scatter stage through `repro.dist.fault.WorkQueue` leases so a lost
-shard re-queues instead of dropping reads.  Output is byte-identical to
-the single-device mappers at any shard count.
+winners reduce **on device** by a packed monotone uint64 key argmin
+(`merge`; the host lexicographic rule survives as the differential
+oracle ``merge_host``), and the winning-window ``align_batch`` call
+finishes the winners — optionally sharded over the same mesh
+(``align_sharded``) and dispatched without inter-stage host syncs
+through the ``start``/``finish`` pipeline surface (``pipelined``).
+`failover` routes the scatter stage through
+`repro.dist.fault.WorkQueue` leases so a lost shard re-queues instead
+of dropping reads.  Output is byte-identical to the single-device
+mappers at any shard count.
 """
-from .failover import map_batch_with_failover
+from . import merge
+from .failover import map_batch_with_failover, map_batch_with_failover_graph
 from .graph_mapper import (ShardedGraphMapExecutor, get_graph_executor,
                            map_batch_sharded_graph)
 from .graph_partition import (EpochedShardedGraphIndex, GraphShardArrays,
                               ShardedGraphIndex, from_epoched_graph,
                               shard_graph_index)
-from .mapper import (ShardedMapExecutor, get_executor, map_batch_sharded,
-                     required_halo, validate_geometry)
+from .mapper import (PendingBatch, ShardedMapExecutor, get_executor,
+                     map_batch_sharded, required_halo, validate_geometry)
 from .partition import (DEFAULT_HALO, EpochedShardedIndex, ShardArrays,
                         ShardLayout, ShardedIndex, build_sharded_index,
                         from_epoched, plan_layout)
 
 __all__ = [
     "DEFAULT_HALO", "EpochedShardedGraphIndex", "EpochedShardedIndex",
-    "GraphShardArrays", "ShardArrays", "ShardLayout", "ShardedGraphIndex",
-    "ShardedGraphMapExecutor", "ShardedIndex", "ShardedMapExecutor",
-    "build_sharded_index", "from_epoched", "from_epoched_graph",
-    "get_executor", "get_graph_executor", "map_batch_sharded",
-    "map_batch_sharded_graph", "map_batch_with_failover", "plan_layout",
-    "required_halo", "shard_graph_index", "validate_geometry",
+    "GraphShardArrays", "PendingBatch", "ShardArrays", "ShardLayout",
+    "ShardedGraphIndex", "ShardedGraphMapExecutor", "ShardedIndex",
+    "ShardedMapExecutor", "build_sharded_index", "from_epoched",
+    "from_epoched_graph", "get_executor", "get_graph_executor",
+    "map_batch_sharded", "map_batch_sharded_graph",
+    "map_batch_with_failover", "map_batch_with_failover_graph", "merge",
+    "plan_layout", "required_halo",
+    "shard_graph_index", "validate_geometry",
 ]

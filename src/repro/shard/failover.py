@@ -1,4 +1,4 @@
-"""Shard failover: lease-routed scatter so a lost shard re-queues.
+"""Shard failover: lease-routed scatter + align so a lost shard re-queues.
 
 The serve path normally launches the scatter stage as one program over
 all shards; this module is the degraded-mode driver for when shards can
@@ -15,8 +15,20 @@ runs as its own single-shard program routed through the PR-1
   candidates, so no read silently loses the shard that owned its true
   mapping locus.
 
-``fault_hook(shard_id, attempt)`` exists for tests and chaos drills: it
-runs before each shard stage and may raise to simulate a lost device.
+Since PR 10 the merge is the packed-key **device** reduction
+(`repro.shard.merge`; span ``merge_device``) and the align stage can
+fail independently too: with ``align_fault_hook`` the winning windows
+split into per-owner-shard chunks on a second lease queue, so a shard
+lost *between merge and align* — the window the pipelined serve path
+opens — re-queues its chunk instead of dropping those reads.
+``pipelined=True`` dispatches merge → align without the inter-stage
+host sync, mirroring the engine's double-buffered mode.
+
+``fault_hook(shard_id, attempt)`` / ``align_fault_hook(shard_id,
+attempt)`` exist for tests and chaos drills: they run before each
+shard stage / align chunk and may raise to simulate a lost device.
+`map_batch_with_failover_graph` is the same driver for the
+variation-graph workload (screen → stage → device merge → align).
 """
 from __future__ import annotations
 
@@ -30,6 +42,8 @@ from repro.core.genasm import GenASMConfig
 from repro.core.mapper import MapResult
 from repro.dist.fault import WorkQueue
 
+from . import merge as shard_merge
+from .graph_partition import EpochedShardedGraphIndex, GraphShardArrays
 from .mapper import ShardStageResult, get_executor
 from .partition import EpochedShardedIndex, ShardArrays
 
@@ -37,6 +51,83 @@ from .partition import EpochedShardedIndex, ShardArrays
 def _row(arrays: ShardArrays, i: int) -> ShardArrays:
     """A one-shard [1, ...] view of row ``i`` of the stacked arrays."""
     return ShardArrays(*[a[i: i + 1] for a in arrays])
+
+
+def _graph_row(arrays: GraphShardArrays, i: int) -> GraphShardArrays:
+    """A one-shard [1, ...] view of row ``i`` of the stacked graph arrays."""
+    return GraphShardArrays(*[a[i: i + 1] for a in arrays])
+
+
+def _run_shard_queue(s, *, esi, lease_s, max_attempts, fault_hook, tr,
+                     span_name, work, **span_attrs):
+    """Lease-queue driver: run ``work(shard_id)`` once per shard with retry.
+
+    Returns ``{shard_id: work result}`` after every shard completed;
+    re-materializes + re-queues a shard whose ``work`` (or
+    ``fault_hook``) raises, giving up only after ``max_attempts``.
+    """
+    q = WorkQueue(s, lease_s=lease_s)
+    attempts = [0] * s
+    parts: dict[int, object] = {}
+    while not q.finished:
+        item = q.claim()
+        if item is None:
+            time.sleep(0.001)
+            continue
+        attempts[item] += 1
+        try:
+            with tr.span(span_name, shard=item, attempt=attempts[item],
+                         **span_attrs):
+                if fault_hook is not None:
+                    fault_hook(item, attempts[item])
+                parts[item] = work(item)
+        except Exception as e:
+            if attempts[item] >= max_attempts:
+                raise RuntimeError(
+                    f"shard {item} failed {attempts[item]} times in "
+                    f"{span_name}; last error: {e}") from e
+            esi.refresh_shard(item)  # re-materialize before the retry
+            q.fail(item)
+            tr.event("shard_requeued", shard=item, attempt=attempts[item],
+                     stage=span_name, error=type(e).__name__)
+            continue
+        q.complete(item)
+    return parts
+
+
+def _chunked_align(owner, align_one, template, b, *, s, esi, lease_s,
+                   max_attempts, align_fault_hook, tr):
+    """Align the winners in per-owner-shard chunks on a lease queue.
+
+    ``owner[b]`` is each read's winning shard; chunk ``i`` aligns the
+    reads shard ``i`` owns (``align_one(row_idx) -> numpy tree``) and a
+    chunk whose shard dies between merge and align re-queues instead of
+    dropping its reads.  Results scatter back into ``template``-shaped
+    arrays, so the assembled batch is byte-identical to the one-shot
+    align — ``align_batch`` is per-row independent.
+    """
+    chunks = [np.nonzero(owner == i)[0] for i in range(s)]
+
+    def work(i):
+        idx = chunks[i]
+        if idx.size == 0:
+            return None
+        return idx, align_one(idx)
+
+    parts = _run_shard_queue(
+        s, esi=esi, lease_s=lease_s, max_attempts=max_attempts,
+        fault_hook=align_fault_hook, tr=tr, span_name="align_shard",
+        work=work)
+
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out = [np.zeros((b,) + lf.shape[1:], lf.dtype) for lf in leaves]
+    for part in parts.values():
+        if part is None:
+            continue
+        idx, res = part
+        for dst, src in zip(out, jax.tree_util.tree_leaves(res)):
+            dst[idx] = src
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def map_batch_with_failover(
@@ -53,6 +144,8 @@ def map_batch_with_failover(
     lease_s: float = 60.0,
     max_attempts: int = 3,
     fault_hook=None,
+    align_fault_hook=None,
+    pipelined: bool = False,
     tracer=None,
 ) -> MapResult:
     """Map a batch with per-shard retry semantics over a lease queue.
@@ -65,14 +158,16 @@ def map_batch_with_failover(
 
     ``tracer`` (a `repro.obs.trace.Tracer`) records one ``scatter`` span
     per shard attempt (attrs: ``shard``, ``attempt``), a
-    ``shard_requeued`` instant per lease failure, and the ``merge`` /
-    ``align`` tail spans — the flight recorder for chaos drills.
+    ``shard_requeued`` instant per lease failure, and the
+    ``merge_device`` / ``align`` (or per-chunk ``align_shard``) tail
+    spans — the flight recorder for chaos drills.
     """
     from repro.obs.trace import NULL_TRACER
 
     tr = tracer if tracer is not None else NULL_TRACER
     sharded, _ = esi.current()
     s = sharded.num_shards
+    b = int(np.asarray(reads).shape[0])
     # shared keyed cache (mapper.get_executor): repeated degraded-mode
     # batches reuse the compiled stage/align programs instead of
     # retracing per call
@@ -81,44 +176,166 @@ def map_batch_with_failover(
         filter_k=filter_k, shard_candidates=shard_candidates,
         backend=backend, force_vmap=True)
 
-    q = WorkQueue(s, lease_s=lease_s)
-    attempts = [0] * s
-    parts: dict[int, tuple] = {}
-    while not q.finished:
-        item = q.claim()
-        if item is None:
-            time.sleep(0.001)
-            continue
-        attempts[item] += 1
-        try:
-            with tr.span("scatter", shard=item, attempt=attempts[item]):
-                if fault_hook is not None:
-                    fault_hook(item, attempts[item])
-                cur, _ = esi.current()
-                st = ex.stage(_row(cur.arrays, item), reads, read_lens)
-                parts[item] = jax.tree_util.tree_map(
-                    lambda x: np.asarray(x)[0], st)
-        except Exception as e:
-            if attempts[item] >= max_attempts:
-                raise RuntimeError(
-                    f"shard {item} failed {attempts[item]} times; last "
-                    f"error: {e}") from e
-            esi.refresh_shard(item)  # re-materialize before the retry
-            q.fail(item)
-            tr.event("shard_requeued", shard=item, attempt=attempts[item],
-                     error=type(e).__name__)
-            continue
-        q.complete(item)
+    def scatter_one(item):
+        cur, _ = esi.current()
+        st = ex.stage(_row(cur.arrays, item), reads, read_lens)
+        return jax.tree_util.tree_map(lambda x: np.asarray(x)[0], st)
 
-    with tr.span("merge", shards=s):
+    parts = _run_shard_queue(
+        s, esi=esi, lease_s=lease_s, max_attempts=max_attempts,
+        fault_hook=fault_hook, tr=tr, span_name="scatter",
+        work=scatter_one)
+
+    with tr.span("merge_device", shards=s, pipelined=pipelined):
         stacked = ShardStageResult(*[
             jnp.asarray(np.stack([parts[i][f] for i in range(s)]))
             for f in range(len(ShardStageResult._fields))])
-        fd, pos, text, t_len, _ = ex.merge(stacked)
-    with tr.span("align"):
-        res = ex._align(jnp.asarray(text), jnp.asarray(reads),
-                        jnp.asarray(read_lens, jnp.int32),
-                        jnp.asarray(t_len), jnp.asarray(pos),
-                        jnp.asarray(fd))
-        res = jax.tree_util.tree_map(np.asarray, res)
-    return res
+        fd, pos, text, t_len, win = ex.merge_device(stacked)
+        if not pipelined:
+            jax.block_until_ready(fd)
+
+    reads_j = jnp.asarray(reads)
+    lens_j = jnp.asarray(read_lens, jnp.int32)
+    if align_fault_hook is None:
+        with tr.span("align"):
+            res = ex._align(text, reads_j, lens_j, t_len, pos, fd)
+            return jax.tree_util.tree_map(np.asarray, res)
+
+    owner = np.asarray(win)
+    fd, pos, text, t_len = (np.asarray(a) for a in (fd, pos, text, t_len))
+    reads_np = np.asarray(reads)
+    lens_np = np.asarray(read_lens, np.int32)
+
+    def align_one(idx):
+        res = ex._align(
+            jnp.asarray(text[idx]), jnp.asarray(reads_np[idx]),
+            jnp.asarray(lens_np[idx]), jnp.asarray(t_len[idx]),
+            jnp.asarray(pos[idx]), jnp.asarray(fd[idx]))
+        return jax.tree_util.tree_map(np.asarray, res)
+
+    # template from a 1-row probe: chunk outputs scatter into [B] arrays
+    template = align_one(np.arange(1))
+    return _chunked_align(
+        owner, align_one, template, b, s=s, esi=esi, lease_s=lease_s,
+        max_attempts=max_attempts, align_fault_hook=align_fault_hook,
+        tr=tr)
+
+
+def map_batch_with_failover_graph(
+    esi: EpochedShardedGraphIndex,
+    reads,
+    read_lens,
+    *,
+    cfg: GenASMConfig = GenASMConfig(),
+    p_cap: int = 256,
+    filter_bits: int = 128,
+    filter_k: int = 12,
+    shard_candidates: int = 4,
+    backend: str | None = None,
+    prefilter: bool | None = None,
+    lease_s: float = 60.0,
+    max_attempts: int = 3,
+    fault_hook=None,
+    align_fault_hook=None,
+    pipelined: bool = False,
+    tracer=None,
+):
+    """Graph-workload twin of `map_batch_with_failover`.
+
+    Per shard: q-gram screen + compacted candidate stage as its own
+    lease-queued program (``scatter`` spans; ``fault_hook`` faults it),
+    then the packed ``(distance, origin, tile)`` device merge and the
+    winner align — chunked per owner shard on a second lease queue when
+    ``align_fault_hook`` is given, so a shard lost between merge and
+    align re-queues.  Byte-identical to
+    `shard.graph_mapper.map_batch_sharded_graph` under any failure
+    sequence that stays within ``max_attempts``.
+    """
+    from repro.graph.mapper import tile_rung, unmapped_result
+    from repro.obs.trace import NULL_TRACER
+
+    from .graph_mapper import get_graph_executor
+
+    tr = tracer if tracer is not None else NULL_TRACER
+    sharded, _ = esi.current()
+    s = sharded.num_shards
+    reads_j = jnp.asarray(reads)
+    lens_j = jnp.asarray(read_lens, jnp.int32)
+    b = int(reads_j.shape[0])
+    ex = get_graph_executor(
+        sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
+        filter_k=filter_k, shard_candidates=shard_candidates,
+        backend=backend, force_vmap=True, prefilter=prefilter)
+
+    def stage_one(item):
+        # screen + stage for one shard; the rung must match the fleet
+        # rule (worst shard's survivor count), so the screen runs per
+        # shard but the rung is picked after all shards report
+        cur, _ = esi.current()
+        row = _graph_row(cur.arrays, item)
+        pf = ex._pf(*row, reads_j, lens_j)
+        n_keep = int(np.asarray(pf.n_keep)[0].sum())
+        return esi.epochs[item], pf, n_keep
+
+    screened = _run_shard_queue(
+        s, esi=esi, lease_s=lease_s, max_attempts=max_attempts,
+        fault_hook=fault_hook, tr=tr, span_name="scatter",
+        work=stage_one)
+
+    slots = b * shard_candidates
+    n_cap = tile_rung(max(screened[i][2] for i in range(s)), slots)
+    if n_cap == 0:
+        return jax.tree_util.tree_map(
+            np.asarray, unmapped_result(b, cfg=cfg, p_cap=p_cap))
+
+    def candidates_one(item):
+        cur, _ = esi.current()
+        row = _graph_row(cur.arrays, item)
+        # a refreshed shard (epoch bumped since the screen pass)
+        # recomputes its deterministic screen before the stage
+        pf = screened[item][1] if esi.epochs[item] == screened[item][0] \
+            else ex._pf(*row, reads_j, lens_j)
+        st = ex._stage_for(n_cap)(*row, reads_j, lens_j, pf)
+        return jax.tree_util.tree_map(lambda x: np.asarray(x)[0], st)
+
+    parts = _run_shard_queue(
+        s, esi=esi, lease_s=lease_s, max_attempts=max_attempts,
+        fault_hook=None, tr=tr, span_name="scatter", work=candidates_one,
+        phase="candidates")
+
+    fields = type(parts[0])._fields
+    with tr.span("merge_device", shards=s, pipelined=pipelined):
+        stacked = type(parts[0])(*[
+            jnp.asarray(np.stack([getattr(parts[i], f) for i in range(s)]))
+            for f in fields])
+        merged = ex.merge_device(stacked)
+        if not pipelined:
+            jax.block_until_ready(merged.distance)
+
+    if align_fault_hook is None:
+        with tr.span("align"):
+            res = ex._align(merged, reads_j, lens_j)
+            return jax.tree_util.tree_map(np.asarray, res)
+
+    # owner shard via the same packed key the device merge used — numpy
+    # uint64 needs no x64 flag, so this host copy is exact
+    owner = np.argmin(shard_merge.pack_graph_key(
+        np.stack([np.asarray(parts[i].distance) for i in range(s)]),
+        np.stack([np.asarray(parts[i].origin) for i in range(s)]),
+        np.stack([np.asarray(parts[i].tile) for i in range(s)])), axis=0)
+    merged_np = jax.tree_util.tree_map(np.asarray, merged)
+    reads_np = np.asarray(reads)
+    lens_np = np.asarray(read_lens, np.int32)
+
+    def align_one(idx):
+        sub = jax.tree_util.tree_map(lambda x: jnp.asarray(x[idx]),
+                                     merged_np)
+        res = ex._align(sub, jnp.asarray(reads_np[idx]),
+                        jnp.asarray(lens_np[idx]))
+        return jax.tree_util.tree_map(np.asarray, res)
+
+    template = align_one(np.arange(1))
+    return _chunked_align(
+        owner, align_one, template, b, s=s, esi=esi, lease_s=lease_s,
+        max_attempts=max_attempts, align_fault_hook=align_fault_hook,
+        tr=tr)

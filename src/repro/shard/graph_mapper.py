@@ -6,9 +6,13 @@ scattered: every shard runs the seed + q-gram tile screen
 a host sync on the per-shard survivor counts picks one shared
 `tile_rung`, each shard compacts its survivors into that many DC rows
 (`graph_candidate_stage` with ``pf``/``n_cap``), per-shard winners merge
-on the host by the lexicographic ``min (filter distance, origin node,
-tile)`` in global coordinates, and one batched graph ``align_batch``
-call finishes.  The screen and compaction are bitwise-neutral per shard
+**on device** by an argmin-reduce over the packed monotone uint64
+``(filter distance, origin node, tile)`` key (`repro.shard.merge`,
+global coordinates; the host lex merge survives as ``merge_host``, the
+differential oracle), and one batched graph ``align_batch`` call
+finishes — optionally sharded over the same mesh
+(``align_sharded=True``) and dispatchable without blocking through the
+``start()``/``finish()`` pipeline surface.  The screen and compaction are bitwise-neutral per shard
 (see `graph/mapper`), and the merge rule is the same one the whole-graph
 mapper applies across its candidate axis — so GAF output stays
 byte-identical at 1 and N shards, prefilter on or off.  Winners travel
@@ -33,7 +37,9 @@ from repro.graph.mapper import (CandidateStageResult, GraphMapResult,
                                 graph_backend_name, graph_candidate_stage,
                                 tile_prefilter, tile_rung, unmapped_result)
 
+from . import merge as shard_merge
 from .graph_partition import GraphShardArrays, ShardedGraphIndex
+from .mapper import PendingBatch
 
 
 def validate_graph_geometry(sharded: ShardedGraphIndex, *, p_cap: int,
@@ -102,10 +108,14 @@ class ShardedGraphMapExecutor:
                  backend: str | None = None,
                  block_bt: int | None = None,
                  force_vmap: bool = False,
+                 align_sharded: bool = False,
                  prefilter: bool | None = None,
                  trace_hook=None):
         validate_graph_geometry(sharded, p_cap=p_cap, filter_k=filter_k,
                                 cfg=cfg)
+        shard_merge.check_graph_domain(n_tiles=sharded.n_tiles,
+                                       filter_k=filter_k)
+        self.align_sharded = align_sharded
         self.num_shards = sharded.num_shards
         self.backend = graph_backend_name(backend)
         self.cfg = cfg
@@ -203,12 +213,63 @@ class ShardedGraphMapExecutor:
         self._make_stage = make_stage
         self._stages: dict[int, object] = {}
 
-        def align_stage(merged: CandidateStageResult, reads, lens):
-            self._hook(("align",))
+        def align_core(merged: CandidateStageResult, reads, lens):
             return align_winners(merged, reads, lens, cfg=cfg, p_cap=p_cap,
                                  backend=self.backend, block_bt=block_bt)
 
-        self._align = jax.jit(align_stage)
+        def align_stage(merged: CandidateStageResult, reads, lens):
+            self._hook(("align",))
+            return align_core(merged, reads, lens)
+
+        s = self.num_shards
+
+        def align_stage_sharded(merged: CandidateStageResult, reads, lens):
+            # round-robin [S, B/S] split of the merged winners on the
+            # shard mesh; windows/bwin travel with the winner, so each
+            # block aligns without graph arrays — bit-neutral per read
+            self._hook(("align_shard",))
+            b = reads.shape[0]
+            bs = -(-b // s)
+
+            def blocked(x):
+                x = jnp.pad(x, ((0, bs * s - b),)
+                            + ((0, 0),) * (x.ndim - 1))
+                return x.reshape((s, bs) + x.shape[1:])
+
+            margs = jax.tree.map(blocked, merged)
+            rargs = (blocked(reads), blocked(lens))
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+
+                def block(m, r, ln):
+                    out = align_core(jax.tree.map(lambda y: y[0], m),
+                                     r[0], ln[0])
+                    return jax.tree.map(lambda y: y[None], out)
+
+                out = shard_map(
+                    block, mesh=mesh,
+                    in_specs=(P("shard"), P("shard"), P("shard")),
+                    out_specs=P("shard"))(margs, *rargs)
+            else:
+                out = jax.vmap(align_core)(margs, *rargs)
+            return jax.tree.map(
+                lambda y: y.reshape((bs * s,) + y.shape[2:])[:b], out)
+
+        self._align = jax.jit(
+            align_stage_sharded if align_sharded else align_stage)
+        self._align_stage_name = ("align_shard" if align_sharded
+                                  else "align")
+        # packed (distance, origin, tile) argmin-reduce on device
+        self._merge = jax.jit(shard_merge.merge_graph)
+        # the argmin collapses the shard axis but leaves its outputs
+        # replicated across the mesh; a full-batch align traced on
+        # replicated operands re-runs on every device, so the tiny
+        # merged rows are committed to one device first.  A mesh-split
+        # align partitions the work itself and must see mesh-addressable
+        # inputs, so it keeps them replicated.
+        self._off_mesh = (None if mesh is None or align_sharded
+                          else mesh.devices.flat[0])
         self.last_stats: dict = {}
         # (stage, t0, t1, attrs) monotonic windows from the last call —
         # the serve engine replays them as child spans of its flush span
@@ -221,9 +282,11 @@ class ShardedGraphMapExecutor:
         return fn
 
     @staticmethod
-    def merge(st: CandidateStageResult) -> CandidateStageResult:
-        """Host merge: lexicographic ``(distance, origin, tile)`` per read.
+    def merge_host(st: CandidateStageResult) -> CandidateStageResult:
+        """Reference host merge: lex ``(distance, origin, tile)`` per read.
 
+        Kept as the independently coded oracle for the differential
+        suite — the packed-key device merge must match it bit for bit.
         Identical windows duplicated across neighbouring shards'
         overlap regions collapse because their full sort key (and the
         window bytes behind it) are equal.
@@ -243,9 +306,39 @@ class ShardedGraphMapExecutor:
             tile=pick(st.tile), gwin=pick(st.gwin), bwin=pick(st.bwin),
             t_len=pick(st.t_len), prefilter_ok=pick(st.prefilter_ok))
 
-    def __call__(self, arrays: GraphShardArrays, reads, read_lens
-                 ) -> GraphMapResult:
-        """Map one batch: screen → rung-compacted scatter → merge → align."""
+    # chaos drills and older callers used ``ex.merge``
+    merge = merge_host
+
+    def merge_device(self, st: CandidateStageResult
+                     ) -> CandidateStageResult:
+        """Packed-key argmin-reduce on device (`repro.shard.merge`).
+
+        Same winner and tie-break as `merge_host` — dead candidates
+        carry sentinel origin *and* tile (the stage's shared ``live``
+        mask), so the packed order and the three-level masked merge
+        agree — with no host round trip.
+        """
+        with shard_merge.x64_scope():
+            d, origin, tile, gwin, bwin, t_len, pf_ok, _win = self._merge(
+                st.distance, st.origin, st.tile, st.gwin, st.bwin,
+                st.t_len, st.prefilter_ok)
+        out = CandidateStageResult(
+            distance=d, origin=origin, tile=tile, gwin=gwin, bwin=bwin,
+            t_len=t_len, prefilter_ok=pf_ok)
+        if self._off_mesh is not None:
+            out = jax.device_put(out, self._off_mesh)
+        return out
+
+    def start(self, arrays: GraphShardArrays, reads, read_lens, *,
+              timed: bool = True) -> PendingBatch:
+        """Dispatch screen → scatter → device merge → align, non-blocking.
+
+        The prefilter's host sync (rung selection needs the survivor
+        counts) always happens; everything after it stays on device
+        until `finish`.  ``timed=False`` skips the inter-stage syncs
+        for pipelined serving.  The zero-survivor short-circuit returns
+        an already-materialized batch (``tail=None``).
+        """
         reads = jnp.asarray(reads)
         lens = jnp.asarray(read_lens, jnp.int32)
         b = int(reads.shape[0])
@@ -259,34 +352,61 @@ class ShardedGraphMapExecutor:
         live = int(np.asarray(pf.n_live).sum())
         # one rung for all shards: the worst shard's survivor count
         n_cap = tile_rung(int(n_keep.sum(axis=1).max()), slots)
-        self.last_stats = dict(
+        stats = dict(
             candidate_slots=self.num_shards * slots, tiles_live=live,
             tiles_kept=kept, tiles_pruned=live - kept,
             dc_rows=self.num_shards * n_cap,
             dc_rows_dense=self.num_shards * slots,
             reads_zero_survivor=int((n_keep.sum(axis=0) == 0).sum()))
-        self.last_times = [("prefilter", t0, t1, {"compile": c_pf,
-                                                  "shards": self.num_shards})]
+        self.last_stats = stats
+        times = [("prefilter", t0, t1, {"compile": c_pf,
+                                        "shards": self.num_shards})]
         if n_cap == 0:
-            return jax.tree_util.tree_map(
+            res = jax.tree_util.tree_map(
                 np.asarray, unmapped_result(b, cfg=self.cfg,
                                             p_cap=self.p_cap))
+            return PendingBatch(res=res, times=tuple(times), t_dispatch=t1,
+                                tail=None, stats=stats)
         c_dc = (n_cap,) not in self._compiled
-        c_al = ("align",) not in self._compiled
+        c_al = (self._align_stage_name,) not in self._compiled
         t2 = time.monotonic()
         st = self._stage_for(n_cap)(*arrays, reads, lens, pf)
-        jax.block_until_ready(st)
-        t3 = time.monotonic()
-        merged = self.merge(st)
-        t4 = time.monotonic()
-        res = self._align(jax.tree.map(jnp.asarray, merged), reads, lens)
-        res = jax.tree_util.tree_map(np.asarray, res)
-        t5 = time.monotonic()
-        self.last_times += [
-            ("dc_filter", t2, t3,
-             {"compile": c_dc, "dc_rows": self.num_shards * n_cap}),
-            ("merge", t3, t4, {}),
-            ("align", t4, t5, {"compile": c_al})]
+        if timed:
+            jax.block_until_ready(st)
+            t3 = time.monotonic()
+            times.append(("dc_filter", t2, t3,
+                          {"compile": c_dc,
+                           "dc_rows": self.num_shards * n_cap}))
+        merged = self.merge_device(st)
+        if timed:
+            jax.block_until_ready(merged.distance)
+            t4 = time.monotonic()
+            times.append(("merge_device", t3, t4,
+                          {"shards": self.num_shards}))
+        else:
+            t4 = time.monotonic()
+        res = self._align(merged, reads, lens)
+        return PendingBatch(res=res, times=tuple(times), t_dispatch=t4,
+                            tail=(self._align_stage_name,
+                                  {"compile": c_al,
+                                   "sharded": self.align_sharded}),
+                            stats=stats)
+
+    @staticmethod
+    def finish(pending: PendingBatch):
+        """Materialize a `start` batch → ``(numpy result, stage times)``."""
+        if pending.tail is None:
+            return pending.res, pending.times
+        res = jax.tree_util.tree_map(np.asarray, pending.res)
+        name, attrs = pending.tail
+        return res, pending.times + ((name, pending.t_dispatch,
+                                      time.monotonic(), attrs),)
+
+    def __call__(self, arrays: GraphShardArrays, reads, read_lens
+                 ) -> GraphMapResult:
+        """Map one batch: screen → scatter → device merge → align."""
+        res, times = self.finish(self.start(arrays, reads, read_lens))
+        self.last_times = list(times)
         return res
 
 
@@ -308,18 +428,20 @@ def get_graph_executor(
     block_bt: int | None = None,
     force_vmap: bool = False,
     prefilter: bool | None = None,
+    align_sharded: bool = False,
 ) -> ShardedGraphMapExecutor:
     """Cached :class:`ShardedGraphMapExecutor` per (geometry, params)."""
     prefilter = _env_prefilter(prefilter)
     key = (sharded.layout_key, cfg, p_cap, filter_bits, filter_k,
-           shard_candidates, backend, block_bt, force_vmap, prefilter)
+           shard_candidates, backend, block_bt, force_vmap, prefilter,
+           align_sharded)
     ex = _EXECUTORS.get(key)
     if ex is None:
         ex = ShardedGraphMapExecutor(
             sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
             filter_k=filter_k, shard_candidates=shard_candidates,
             backend=backend, block_bt=block_bt, force_vmap=force_vmap,
-            prefilter=prefilter)
+            prefilter=prefilter, align_sharded=align_sharded)
         _EXECUTORS[key] = ex
         while len(_EXECUTORS) > _EXECUTOR_CACHE_CAP:
             _EXECUTORS.popitem(last=False)
@@ -342,6 +464,8 @@ def map_batch_sharded_graph(
     block_bt: int | None = None,
     force_vmap: bool = False,
     prefilter: bool | None = None,
+    align_sharded: bool = False,
+    pipelined: bool = False,
 ) -> GraphMapResult:
     """Map a read batch against a sharded variation-graph index.
 
@@ -349,11 +473,17 @@ def map_batch_sharded_graph(
     leaves) as the single-device `graph.mapper.map_batch` —
     byte-identical positions, CIGARs, and GAF node paths for any shard
     count, with the q-gram tile screen on or off.  Executors are cached
-    per (geometry, parameters).
+    per (geometry, parameters).  ``pipelined`` dispatches through the
+    non-blocking `start`/`finish` surface (no inter-stage syncs).
     """
     ex = get_graph_executor(
         sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
         filter_k=filter_k, shard_candidates=shard_candidates,
         backend=backend, block_bt=block_bt, force_vmap=force_vmap,
-        prefilter=prefilter)
+        prefilter=prefilter, align_sharded=align_sharded)
+    if pipelined:
+        res, times = ex.finish(ex.start(sharded.arrays, reads, read_lens,
+                                        timed=False))
+        ex.last_times = list(times)
+        return res
     return ex(sharded.arrays, reads, read_lens)

@@ -13,12 +13,27 @@ Execution plan per flush (the dissertation's channel dataflow, DESIGN.md
    bit-identical.
 2. **Merge** — per-shard winners carry *global* (filter distance,
    refined position) pairs plus their ``[t_cap]`` alignment window
-   bytes; the host picks the lexicographic minimum per read.  Windows
-   in overlap halos are byte-identical across neighbouring shards, so
-   duplicated boundary candidates dedup by construction.
+   bytes; a device argmin-reduce on the packed monotone uint64
+   ``(distance, position)`` key (`repro.shard.merge`) picks the
+   lexicographic minimum per read *without leaving the device* — the
+   host lex merge survives only as the reference implementation
+   (``merge_host``) for the differential suite and chaos drills.
+   Windows in overlap halos are byte-identical across neighbouring
+   shards, so duplicated boundary candidates dedup by construction.
 3. **Align** — one batched `repro.align.align_batch` call on the
    winning windows (any registered backend); no stage after the merge
-   touches the sharded reference.
+   touches the sharded reference.  With ``align_sharded=True`` the
+   batch is round-robin split into ``[S, B/S]`` blocks and aligned
+   under the same shard mesh (``dist.sharding.stacked_specs`` layout);
+   per-read results are independent, so the split is bit-neutral.
+
+The executor also exposes a two-phase ``start()``/``finish()`` surface:
+``start`` dispatches scatter → device merge → align and returns a
+:class:`PendingBatch` of device-resident results without blocking on
+the align program, ``finish`` materializes it.  The serve engine's
+``pipelined`` mode uses this to overlap batch *i*'s align against
+batch *i+1*'s scatter (double buffering); ``__call__`` is simply
+``finish(start(...))`` with per-stage timing in between.
 
 The per-shard stage calls `repro.core.mapper.seed_filter_read` — the
 *same* function the single-device mapper runs with offset 0 — which is
@@ -52,6 +67,7 @@ from repro.core.genasm import GenASMConfig
 from repro.core.mapper import MapResult, POS_SENTINEL
 from repro.dist import sharding as dist_sharding
 
+from . import merge as shard_merge
 from .partition import ShardArrays, ShardedIndex
 
 
@@ -62,6 +78,25 @@ class ShardStageResult(NamedTuple):
     position: jnp.ndarray  # [S, B] int32 refined global start (sentinel=none)
     text: jnp.ndarray  # [S, B, t_cap] int8 alignment window at position
     t_len: jnp.ndarray  # [S, B] int32 valid window length
+
+
+class PendingBatch(NamedTuple):
+    """In-flight batch from ``start()``: device results + closed spans.
+
+    ``res`` holds the executor's result tree with *device* leaves (the
+    align program may still be running); ``times`` the already-closed
+    ``(stage, t0, t1, attrs)`` windows; ``tail`` the name/attrs of the
+    span ``finish()`` will close from ``t_dispatch`` to materialization
+    (None when the result is already host-resident, e.g. the graph
+    zero-survivor short-circuit); ``stats`` the graph executors'
+    ``last_stats`` payload (None for linear).
+    """
+
+    res: object
+    times: tuple
+    t_dispatch: float
+    tail: tuple | None  # (stage_name, attrs)
+    stats: dict | None = None
 
 
 def required_halo(*, p_cap: int, filter_bits: int, filter_k: int,
@@ -112,12 +147,14 @@ def _stage_one_shard(ref_row, off_row, hash_row, pos_row, reads, read_lens,
 class ShardedMapExecutor:
     """Compiled scatter/merge/align pipeline for one sharded geometry.
 
-    Holds two jitted programs — the shard stage (``shard_map`` over a
+    Holds three jitted programs — the shard stage (``shard_map`` over a
     shard mesh when ``jax.device_count() >= num_shards``, else a
-    stacked ``vmap``) and the align stage — plus the host merge between
-    them.  Construct once per (index geometry, mapping parameters) and
-    call with ``(ShardArrays, reads, lens)``; the serve engine caches
-    executors exactly like its single-device ones.
+    stacked ``vmap``), the packed-key device merge
+    (`repro.shard.merge.merge_linear` under an x64 scope), and the
+    align stage (optionally sharded over the same mesh).  Construct
+    once per (index geometry, mapping parameters) and call with
+    ``(ShardArrays, reads, lens)``; the serve engine caches executors
+    exactly like its single-device ones.
     """
 
     def __init__(self, sharded: ShardedIndex, *,
@@ -131,6 +168,7 @@ class ShardedMapExecutor:
                  backend: str | None = None,
                  block_bt: int | None = None,
                  force_vmap: bool = False,
+                 align_sharded: bool = False,
                  trace_hook=None):
         t_cap = p_cap + 2 * cfg.w
         filter_bits = min(filter_bits, p_cap)
@@ -139,6 +177,7 @@ class ShardedMapExecutor:
         self.num_shards = sharded.num_shards
         self.filter_k = filter_k
         self.backend = backend
+        self.align_sharded = align_sharded
         user_hook = trace_hook
         self._compiled: set = set()  # stage keys that have traced
 
@@ -189,8 +228,7 @@ class ShardedMapExecutor:
 
             self._stage = jax.jit(stacked_stage)
 
-        def align_stage(text, reads, lens, t_len, pos, fd):
-            hook(("align",))
+        def align_core(text, reads, lens, t_len, pos, fd):
             from repro import align as align_dispatch
 
             lens = lens.astype(jnp.int32)
@@ -206,7 +244,58 @@ class ShardedMapExecutor:
                 distance=jnp.where(failed, -1, res.distance),
                 ops=res.ops, n_ops=res.n_ops, failed=failed)
 
-        self._align = jax.jit(align_stage)
+        def align_stage(text, reads, lens, t_len, pos, fd):
+            hook(("align",))
+            return align_core(text, reads, lens, t_len, pos, fd)
+
+        s = self.num_shards
+
+        def align_stage_sharded(text, reads, lens, t_len, pos, fd):
+            # round-robin split of the merged winners into [S, B/S]
+            # blocks on the shard mesh; per-read results are
+            # independent, so the split (and its padding) is bit-neutral
+            hook(("align_shard",))
+            b = text.shape[0]
+            bs = -(-b // s)  # rows per shard, last block zero-padded
+
+            def blocked(x):
+                x = jnp.pad(x, ((0, bs * s - b),)
+                            + ((0, 0),) * (x.ndim - 1))
+                return x.reshape((s, bs) + x.shape[1:])
+
+            args = tuple(blocked(x)
+                         for x in (text, reads, lens, t_len, pos, fd))
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+
+                def block(*rows):
+                    out = align_core(*[r[0] for r in rows])
+                    return jax.tree.map(lambda y: y[None], out)
+
+                out = shard_map(block, mesh=mesh,
+                                in_specs=(P("shard"),) * 6,
+                                out_specs=P("shard"))(*args)
+            else:
+                out = jax.vmap(align_core)(*args)
+            return jax.tree.map(
+                lambda y: y.reshape((bs * s,) + y.shape[2:])[:b], out)
+
+        self._align = jax.jit(
+            align_stage_sharded if align_sharded else align_stage)
+        self._align_stage_name = ("align_shard" if align_sharded
+                                  else "align")
+        # packed-key argmin-reduce: winners picked on device, only the
+        # [B]-sized merged rows ever needed by the align launch
+        self._merge = jax.jit(shard_merge.merge_linear)
+        # the argmin collapses the shard axis but leaves its outputs
+        # replicated across the mesh; a full-batch align traced on
+        # replicated operands re-runs on every device, so the tiny
+        # merged rows are committed to one device first.  A mesh-split
+        # align partitions the work itself and must see mesh-addressable
+        # inputs, so it keeps them replicated.
+        self._off_mesh = (None if mesh is None or align_sharded
+                          else mesh.devices.flat[0])
         # (stage, t0, t1, attrs) monotonic windows from the last call —
         # the serve engine replays them as child spans of its flush span
         self.last_times: list[tuple[str, float, float, dict]] = []
@@ -221,9 +310,13 @@ class ShardedMapExecutor:
                                 t_len=t_len)
 
     @staticmethod
-    def merge(stage: ShardStageResult):
-        """Host merge: lexicographic-min ``(distance, position)`` per read.
+    def merge_host(stage: ShardStageResult):
+        """Reference host merge: lex-min ``(distance, position)`` per read.
 
+        The pre-device-merge implementation, kept as the independently
+        coded oracle for the differential suite
+        (``tests/test_shard_merge.py``) — the packed-key argmin must
+        match it bit for bit, including the low-shard tie-break.
         Overlap-halo duplicates carry identical (distance, position,
         window bytes) in both neighbouring shards, so whichever copy
         argmin lands on yields the same alignment — dedup for free.
@@ -238,27 +331,74 @@ class ShardedMapExecutor:
         return (m, pm[win, cols], np.asarray(stage.text)[win, cols],
                 np.asarray(stage.t_len)[win, cols], win)
 
-    def __call__(self, arrays: ShardArrays, reads, read_lens) -> MapResult:
-        """Map one batch: scatter → merge → single batched align call."""
+    # chaos drills (failover.py) and older callers used ``ex.merge``
+    merge = merge_host
+
+    def merge_device(self, stage: ShardStageResult):
+        """Packed-key argmin-reduce on device; winners stay device-resident.
+
+        Returns ``(fd, pos, text, t_len, winner_shard)`` as jax arrays —
+        same contract and tie-break as `merge_host`, no host round trip.
+        """
+        with shard_merge.x64_scope():
+            out = self._merge(stage.distance, stage.position,
+                              stage.text, stage.t_len)
+        if self._off_mesh is not None:
+            out = jax.device_put(out, self._off_mesh)
+        return out
+
+    def start(self, arrays: ShardArrays, reads, read_lens, *,
+              timed: bool = True) -> PendingBatch:
+        """Dispatch scatter → device merge → align without materializing.
+
+        The returned :class:`PendingBatch` holds device-resident
+        results; `finish` blocks and converts.  ``timed=False`` skips
+        the inter-stage ``block_until_ready`` syncs (and their spans) —
+        the lowest-overhead dispatch for pipelined serving, where
+        per-stage attribution is sacrificed for overlap.
+        """
         c_sc = ("scatter",) not in self._compiled
-        c_al = ("align",) not in self._compiled
+        align_key = (self._align_stage_name,)
+        c_al = align_key not in self._compiled
+        times: list[tuple[str, float, float, dict]] = []
         t0 = time.monotonic()
         st = self.stage(arrays, reads, read_lens)
-        jax.block_until_ready(st)
-        t1 = time.monotonic()
-        fd, pos, text, t_len, _ = self.merge(st)
-        t2 = time.monotonic()
-        res = self._align(jnp.asarray(text), jnp.asarray(reads),
+        if timed:
+            jax.block_until_ready(st)
+            t1 = time.monotonic()
+            times.append(("scatter", t0, t1,
+                          {"compile": c_sc, "shards": self.num_shards}))
+        fd, pos, text, t_len, _win = self.merge_device(st)
+        if timed:
+            jax.block_until_ready(fd)
+            t2 = time.monotonic()
+            times.append(("merge_device", t1, t2,
+                          {"shards": self.num_shards}))
+        else:
+            t2 = time.monotonic()
+        res = self._align(text, jnp.asarray(reads),
                           jnp.asarray(read_lens, jnp.int32),
-                          jnp.asarray(t_len), jnp.asarray(pos),
-                          jnp.asarray(fd))
-        res = jax.tree_util.tree_map(np.asarray, res)
-        t3 = time.monotonic()
-        self.last_times = [
-            ("scatter", t0, t1,
-             {"compile": c_sc, "shards": self.num_shards}),
-            ("merge", t1, t2, {}),
-            ("align", t2, t3, {"compile": c_al})]
+                          t_len, pos, fd)
+        return PendingBatch(res=res, times=tuple(times), t_dispatch=t2,
+                            tail=(self._align_stage_name,
+                                  {"compile": c_al,
+                                   "sharded": self.align_sharded}))
+
+    @staticmethod
+    def finish(pending: PendingBatch):
+        """Materialize a `start` batch → ``(numpy result, stage times)``."""
+        res = jax.tree_util.tree_map(np.asarray, pending.res)
+        times = pending.times
+        if pending.tail is not None:
+            name, attrs = pending.tail
+            times = times + ((name, pending.t_dispatch, time.monotonic(),
+                              attrs),)
+        return res, times
+
+    def __call__(self, arrays: ShardArrays, reads, read_lens) -> MapResult:
+        """Map one batch: scatter → device merge → batched align."""
+        res, times = self.finish(self.start(arrays, reads, read_lens))
+        self.last_times = list(times)
         return res
 
 
@@ -279,6 +419,7 @@ def get_executor(
     backend: str | None = None,
     block_bt: int | None = None,
     force_vmap: bool = False,
+    align_sharded: bool = False,
 ) -> ShardedMapExecutor:
     """Cached :class:`ShardedMapExecutor` for one (geometry, params) key.
 
@@ -288,13 +429,14 @@ def get_executor(
     """
     key = (sharded.layout_key, sharded.minimizer_w, sharded.minimizer_k,
            cfg, p_cap, filter_bits, filter_k, shard_candidates,
-           backend, block_bt, force_vmap)
+           backend, block_bt, force_vmap, align_sharded)
     ex = _EXECUTORS.get(key)
     if ex is None:
         ex = ShardedMapExecutor(
             sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
             filter_k=filter_k, shard_candidates=shard_candidates,
-            backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+            backend=backend, block_bt=block_bt, force_vmap=force_vmap,
+            align_sharded=align_sharded)
         _EXECUTORS[key] = ex
         while len(_EXECUTORS) > _EXECUTOR_CACHE_CAP:
             _EXECUTORS.popitem(last=False)
@@ -316,6 +458,8 @@ def map_batch_sharded(
     backend: str | None = None,
     block_bt: int | None = None,
     force_vmap: bool = False,
+    align_sharded: bool = False,
+    pipelined: bool = False,
 ) -> MapResult:
     """Map a read batch against a sharded reference index.
 
@@ -323,10 +467,18 @@ def map_batch_sharded(
     lengths; returns the same :class:`repro.core.mapper.MapResult`
     (numpy leaves) as the single-device `core.mapper.map_batch` —
     byte-identical positions, distances, and CIGARs for any shard
-    count.  Executors are cached per (geometry, parameters).
+    count, with the align stage sharded or not and through the
+    pipelined (``start``/``finish``) dispatch path or the timed one.
+    Executors are cached per (geometry, parameters).
     """
     ex = get_executor(
         sharded, cfg=cfg, p_cap=p_cap, filter_bits=filter_bits,
         filter_k=filter_k, shard_candidates=shard_candidates,
-        backend=backend, block_bt=block_bt, force_vmap=force_vmap)
+        backend=backend, block_bt=block_bt, force_vmap=force_vmap,
+        align_sharded=align_sharded)
+    if pipelined:
+        res, times = ex.finish(ex.start(sharded.arrays, reads, read_lens,
+                                        timed=False))
+        ex.last_times = list(times)
+        return res
     return ex(sharded.arrays, reads, read_lens)

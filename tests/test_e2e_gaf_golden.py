@@ -29,13 +29,20 @@ BASE_ARGS = [
 
 
 def _run_gaf(tmp_path, backend: str, *, online: bool = False,
-             shards: int = 1) -> bytes:
-    out = tmp_path / f"{backend}{'_online' if online else ''}_s{shards}.gaf"
+             shards: int = 1, align_sharded: bool = False,
+             pipelined: bool = False) -> bytes:
+    tag = (f"{backend}{'_online' if online else ''}_s{shards}"
+           f"{'_as' if align_sharded else ''}{'_pl' if pipelined else ''}")
+    out = tmp_path / f"{tag}.gaf"
     argv = BASE_ARGS + ["--align-backend", backend, "--out", str(out)]
     if online:
         argv += ["--online", "--rate", "2000"]
     if shards != 1:
         argv += ["--num-shards", str(shards)]
+    if align_sharded:
+        argv += ["--align-sharded"]
+    if pipelined:
+        argv += ["--pipelined"]
     serve_genomics.main(argv)
     return out.read_bytes()
 
@@ -59,6 +66,21 @@ def test_sharded_gaf_matches_golden(tmp_path):
     merge to the single-device winners."""
     assert _run_gaf(tmp_path, "graph_lax", shards=2) == \
         GOLDEN.read_bytes(), "GAF with --num-shards 2 diverged"
+
+
+@pytest.mark.parametrize("shards,align_sharded,pipelined", [
+    (2, True, False), (3, False, True), (2, True, True),
+])
+def test_device_merge_align_axes_match_golden(tmp_path, shards,
+                                              align_sharded, pipelined):
+    """The packed (distance, origin, tile) device merge plus the
+    sharded/pipelined align axes must keep GAF bytes — positions,
+    CIGARs, and node paths — identical to the single-device snapshot."""
+    assert _run_gaf(tmp_path, "graph_lax", shards=shards,
+                    align_sharded=align_sharded,
+                    pipelined=pipelined) == GOLDEN.read_bytes(), \
+        (f"GAF with --num-shards {shards} --align-sharded={align_sharded} "
+         f"--pipelined={pipelined} diverged from the snapshot")
 
 
 def test_gaf_rows_are_valid_gaf(tmp_path):

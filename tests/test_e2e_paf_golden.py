@@ -28,13 +28,20 @@ BASE_ARGS = [
 
 
 def _run_paf(tmp_path, backend: str, *, online: bool = False,
-             shards: int = 1) -> bytes:
-    out = tmp_path / f"{backend}{'_online' if online else ''}_s{shards}.paf"
+             shards: int = 1, align_sharded: bool = False,
+             pipelined: bool = False) -> bytes:
+    tag = (f"{backend}{'_online' if online else ''}_s{shards}"
+           f"{'_as' if align_sharded else ''}{'_pl' if pipelined else ''}")
+    out = tmp_path / f"{tag}.paf"
     argv = BASE_ARGS + ["--align-backend", backend, "--out", str(out)]
     if online:
         argv += ["--online", "--rate", "2000"]
     if shards != 1:
         argv += ["--num-shards", str(shards)]
+    if align_sharded:
+        argv += ["--align-sharded"]
+    if pipelined:
+        argv += ["--pipelined"]
     serve_genomics.main(argv)
     return out.read_bytes()
 
@@ -66,3 +73,28 @@ def test_sharded_online_paf_matches_golden(tmp_path):
     """Sharding composes with the online Poisson admission path."""
     assert _run_paf(tmp_path, "lax", online=True, shards=2) == \
         GOLDEN.read_bytes(), "online sharded PAF diverged from the snapshot"
+
+
+@pytest.mark.parametrize("shards,align_sharded,pipelined", [
+    (2, True, False),   # mesh-split align, eager dispatch
+    (2, False, True),   # double-buffered pipeline, full-batch align
+    (3, True, True),    # both axes together
+])
+def test_device_merge_align_axes_match_golden(tmp_path, shards,
+                                              align_sharded, pipelined):
+    """The on-device packed-key merge plus the sharded/pipelined align
+    stage must stay byte-identical to the single-device snapshot: both
+    are pure re-schedulings of the same arithmetic."""
+    assert _run_paf(tmp_path, "lax", shards=shards,
+                    align_sharded=align_sharded,
+                    pipelined=pipelined) == GOLDEN.read_bytes(), \
+        (f"PAF with --num-shards {shards} --align-sharded={align_sharded} "
+         f"--pipelined={pipelined} diverged from the snapshot")
+
+
+def test_pipelined_online_paf_matches_golden(tmp_path):
+    """The pipeline slot (batch i's align overlapping batch i+1's
+    scatter) must not reorder or alter results under Poisson arrivals."""
+    assert _run_paf(tmp_path, "lax", online=True, shards=2,
+                    align_sharded=True, pipelined=True) == \
+        GOLDEN.read_bytes(), "online pipelined PAF diverged from snapshot"

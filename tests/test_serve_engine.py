@@ -81,12 +81,39 @@ def test_executor_cache_one_trace_per_bucket(engine, reads):
         (192, "seed_filter"): 1, (192, "align"): 1}
 
 
+class _FakeClock:
+    """Deterministic monotonic clock the test advances by hand.
+
+    The engine worker re-polls its deadline at least every 50ms of real
+    time, so a fake-clock advance is observed promptly without the test
+    ever racing a real wall-clock deadline."""
+
+    def __init__(self):
+        import threading
+        self._t = 0.0
+        self._lock = threading.Lock()
+
+    def __call__(self):
+        with self._lock:
+            return self._t
+
+    def advance(self, dt):
+        with self._lock:
+            self._t += dt
+
+
 def test_deadline_triggered_flush(epi, reads):
     short, _ = reads
+    clk = _FakeClock()
     cfg = EngineConfig(buckets=(96,), max_batch=8, max_delay_s=0.03,
                        filter_k=10, minimizer_w=8, minimizer_k=12)
-    with ServeEngine(epi, cfg) as eng:
+    with ServeEngine(epi, cfg, clock=clk) as eng:
         futs = [eng.submit(r) for r in short.reads[:3]]
+        # fake time is frozen before the deadline: the partial batch
+        # must stay parked no matter how long compile/dispatch takes
+        time.sleep(0.15)
+        assert not any(f.done() for f in futs)
+        clk.advance(1.0)  # past max_delay_s → deadline flush
         res = [f.result(timeout=30) for f in futs]  # flushes despite 3 < 8
     assert all(r.position >= 0 or r.position == -1 for r in res)
     m = eng.metrics.snapshot()

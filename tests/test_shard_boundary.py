@@ -53,8 +53,15 @@ def _cigars(res):
             for i in range(len(res.n_ops))]
 
 
-@pytest.mark.parametrize("num_shards", [2, 3, 4])
-def test_linear_boundary_reads_map_identically(num_shards):
+@pytest.mark.parametrize("num_shards,align_sharded,pipelined", [
+    # device-merge path at every shard count ...
+    (2, False, False), (3, False, False), (4, False, False),
+    # ... and the mesh-split align / pipelined-dispatch axes, which
+    # must stay byte-neutral on the same boundary-straddling reads
+    (2, True, False), (2, False, True), (3, True, True),
+])
+def test_linear_boundary_reads_map_identically(num_shards, align_sharded,
+                                               pipelined):
     ref = simulate.random_reference(L, seed=21)
     epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
     esi = shard.from_epoched(epi, num_shards)
@@ -67,7 +74,7 @@ def test_linear_boundary_reads_map_identically(num_shards):
         max_candidates=4, backend="lax", **KW, **SEED_KW)
     sharded = shard.map_batch_sharded(
         esi.index, arr, lens, cfg=CFG, shard_candidates=4, backend="lax",
-        **KW)
+        align_sharded=align_sharded, pipelined=pipelined, **KW)
 
     assert (np.asarray(single.position) == sharded.position).all()
     assert (np.asarray(single.distance) == sharded.distance).all()
@@ -76,9 +83,15 @@ def test_linear_boundary_reads_map_identically(num_shards):
     assert (sharded.position >= 0).all()
 
 
-@pytest.mark.parametrize("num_shards", [2, 3])
-@pytest.mark.parametrize("prefilter", [True, False])
-def test_graph_boundary_reads_map_identically(num_shards, prefilter):
+@pytest.mark.parametrize("num_shards,prefilter,align_sharded,pipelined", [
+    (2, True, False, False), (2, False, False, False),
+    (3, True, False, False), (3, False, False, False),
+    # mesh-split align / pipelined-dispatch axes (byte-neutral)
+    (2, True, True, False), (2, False, False, True),
+    (3, True, True, True),
+])
+def test_graph_boundary_reads_map_identically(num_shards, prefilter,
+                                              align_sharded, pipelined):
     ref = simulate.random_reference(L, seed=22)
     variants = simulate.simulate_variants(ref, n_snp=30, n_ins=15,
                                           n_del=15, seed=23)
@@ -95,7 +108,8 @@ def test_graph_boundary_reads_map_identically(num_shards, prefilter):
         **KW, **SEED_KW)
     sharded = shard.map_batch_sharded_graph(
         esi.index, arr, lens, cfg=CFG, shard_candidates=4,
-        backend="graph_lax", prefilter=prefilter, **KW)
+        backend="graph_lax", prefilter=prefilter,
+        align_sharded=align_sharded, pipelined=pipelined, **KW)
 
     assert (np.asarray(single.position) == sharded.position).all()
     assert (np.asarray(single.distance) == sharded.distance).all()

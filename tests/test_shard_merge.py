@@ -1,0 +1,280 @@
+"""Differential + property suite for the packed-key device shard merge.
+
+The PR-10 merge moves shard-winner selection from host Python
+(`merge_host`, the three-line masked lexicographic rule) to a packed
+monotone uint64 argmin on device (`repro.shard.merge`).  That is only
+safe if (a) the packing is a strict order isomorphism with the
+lexicographic sort tuple over its whole domain — boundary values
+included — and (b) the device reduction picks bit-identical winners on
+real stage outputs, engineered ties and all-dead columns included.
+Both are proven here; `merge_host` survives in the executors purely as
+the independently coded oracle for these tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import shard
+from repro.core import mapper as core_mapper
+from repro.core import minimizer_index
+from repro.core.genasm import GenASMConfig
+from repro.core.mapper import POS_SENTINEL
+from repro.genomics import encode, io, simulate
+from repro.graph import index as graph_index
+from repro.graph import mapper as graph_mapper
+from repro.shard import merge as sm
+from repro.shard.graph_mapper import ShardedGraphMapExecutor
+from repro.shard.mapper import ShardedMapExecutor, ShardStageResult
+
+I32_MAX = int(np.iinfo(np.int32).max)
+
+
+def _arr(*vals):
+    return np.asarray(vals, np.int32)
+
+
+# --------------------------------------------------------- property: linear --
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_linear_key_round_trip(data):
+    d = data.draw(st.integers(0, I32_MAX))
+    p = data.draw(st.integers(0, POS_SENTINEL))
+    dd, pp = sm.unpack_linear_key(sm.pack_linear_key(_arr(d), _arr(p)))
+    assert (int(dd[0]), int(pp[0])) == (d, p)
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.data())
+def test_linear_key_order_isomorphism(data):
+    # strict isomorphism: <, ==, > of the packed keys must each match
+    # the lexicographic tuple over the full non-negative int32 domain
+    a = (data.draw(st.integers(0, I32_MAX)),
+         data.draw(st.integers(0, POS_SENTINEL)))
+    b = (data.draw(st.integers(0, I32_MAX)),
+         data.draw(st.integers(0, POS_SENTINEL)))
+    ka = sm.pack_linear_key(_arr(a[0]), _arr(a[1]))[0]
+    kb = sm.pack_linear_key(_arr(b[0]), _arr(b[1]))[0]
+    assert (ka < kb) == (a < b)
+    assert (ka == kb) == (a == b)
+
+
+def test_linear_key_boundary_values():
+    # every pairing of the field extremes keeps strict order — the
+    # cases a lost carry or field overlap would corrupt first
+    ds = [0, 1, 13, I32_MAX - 1, I32_MAX]
+    ps = [0, 1, POS_SENTINEL - 1, POS_SENTINEL]
+    tuples = [(d, p) for d in ds for p in ps]
+    keys = [int(sm.pack_linear_key(_arr(d), _arr(p))[0]) for d, p in tuples]
+    order = sorted(range(len(tuples)), key=lambda i: tuples[i])
+    korder = sorted(range(len(tuples)), key=lambda i: keys[i])
+    assert order == korder
+    assert len(set(keys)) == len(keys)  # injective on the grid
+
+
+# ---------------------------------------------------------- property: graph --
+def _graph_tile(data):
+    # tile domain: real ids below the 21-bit clamp, or the sentinel
+    if data.draw(st.integers(0, 4)) == 0:
+        return POS_SENTINEL
+    return data.draw(st.integers(0, sm.GRAPH_TILE_MAX - 1))
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_graph_key_round_trip(data):
+    d = data.draw(st.integers(0, sm.GRAPH_D_MAX))
+    o = data.draw(st.integers(0, POS_SENTINEL))
+    t = _graph_tile(data)
+    key = sm.pack_graph_key(_arr(d), _arr(o), _arr(t))
+    dd, oo, tt = sm.unpack_graph_key(key)
+    assert (int(dd[0]), int(oo[0]), int(tt[0])) == (d, o, t)
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.data())
+def test_graph_key_order_isomorphism(data):
+    def tup(_):
+        return (data.draw(st.integers(0, sm.GRAPH_D_MAX)),
+                data.draw(st.integers(0, POS_SENTINEL)),
+                _graph_tile(data))
+
+    a, b = tup(0), tup(1)
+    # the sentinel tile packs as the field max, which sorts after every
+    # real tile id exactly like POS_SENTINEL does in the host tuple
+    order_a = (a[0], a[1], min(a[2], sm.GRAPH_TILE_MAX))
+    order_b = (b[0], b[1], min(b[2], sm.GRAPH_TILE_MAX))
+    ka = sm.pack_graph_key(*[_arr(v) for v in a])[0]
+    kb = sm.pack_graph_key(*[_arr(v) for v in b])[0]
+    assert (ka < kb) == (order_a < order_b)
+    assert (ka == kb) == (order_a == order_b)
+
+
+def test_graph_key_boundary_values():
+    ds = [0, 1, sm.GRAPH_D_MAX - 1, sm.GRAPH_D_MAX]
+    os_ = [0, 1, POS_SENTINEL - 1, POS_SENTINEL]
+    ts = [0, 1, sm.GRAPH_TILE_MAX - 1, POS_SENTINEL]
+    tuples = [(d, o, t) for d in ds for o in os_ for t in ts]
+    keys = [int(sm.pack_graph_key(_arr(d), _arr(o), _arr(t))[0])
+            for d, o, t in tuples]
+    order = sorted(range(len(tuples)), key=lambda i: tuples[i])
+    korder = sorted(range(len(tuples)), key=lambda i: keys[i])
+    assert order == korder
+    assert len(set(keys)) == len(keys)
+
+
+def test_graph_domain_check():
+    sm.check_graph_domain(n_tiles=sm.GRAPH_TILE_MAX - 1, filter_k=100)
+    with pytest.raises(ValueError, match="tile field"):
+        sm.check_graph_domain(n_tiles=sm.GRAPH_TILE_MAX, filter_k=12)
+    with pytest.raises(ValueError, match="distance field"):
+        sm.check_graph_domain(n_tiles=64, filter_k=sm.GRAPH_D_MAX)
+
+
+# ------------------------------------------- differential: synthetic stages --
+FILTER_K = 12
+T_CAP = 16
+
+
+def _rand_linear_stage(s, b, rng):
+    d = rng.integers(0, FILTER_K + 2, size=(s, b)).astype(np.int32)
+    pos = rng.integers(0, 5000, size=(s, b)).astype(np.int32)
+    # engineered cross-shard distance ties (positions break them) ...
+    ties = rng.random(b) < 0.4
+    d[:, ties] = d[0, ties]
+    # ... and full-key ties, where the lowest shard must win
+    full = rng.random(b) < 0.25
+    d[:, full] = d[0, full]
+    pos[:, full] = pos[0, full]
+    # no-candidate rows: sentinel distance AND position together
+    none = rng.random((s, b)) < 0.3
+    d[none] = FILTER_K + 1
+    pos[none] = POS_SENTINEL
+    none[:, 0] = True  # one all-dead column: argmin must pick shard 0
+    d[:, 0] = FILTER_K + 1
+    pos[:, 0] = POS_SENTINEL
+    text = rng.integers(0, 4, size=(s, b, T_CAP)).astype(np.int8)
+    t_len = rng.integers(1, T_CAP + 1, size=(s, b)).astype(np.int32)
+    return ShardStageResult(distance=d, position=pos, text=text,
+                            t_len=t_len)
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 4])
+def test_linear_device_merge_matches_host(num_shards):
+    rng = np.random.default_rng(40 + num_shards)
+    for trial in range(4):
+        stage = _rand_linear_stage(num_shards, 24, rng)
+        host = ShardedMapExecutor.merge_host(stage)
+        with sm.x64_scope():
+            dev = jax.jit(sm.merge_linear)(
+                *[jnp.asarray(x) for x in stage])
+        for h, d_ in zip(host, dev):
+            np.testing.assert_array_equal(np.asarray(h), np.asarray(d_))
+
+
+def _rand_graph_stage(s, b, rng):
+    d = rng.integers(0, FILTER_K + 2, size=(s, b)).astype(np.int32)
+    origin = rng.integers(0, 4000, size=(s, b)).astype(np.int32)
+    tile = rng.integers(0, 2000, size=(s, b)).astype(np.int32)
+    # cross-shard ties at every lexicographic level
+    t1 = rng.random(b) < 0.4  # distance tie, origins decide
+    d[:, t1] = d[0, t1]
+    t2 = rng.random(b) < 0.3  # distance+origin tie, tiles decide
+    d[:, t2] = d[0, t2]
+    origin[:, t2] = origin[0, t2]
+    t3 = rng.random(b) < 0.2  # full tie, lowest shard wins
+    d[:, t3] = d[0, t3]
+    origin[:, t3] = origin[0, t3]
+    tile[:, t3] = tile[0, t3]
+    # dead candidates carry sentinel origin AND tile together — the
+    # shared `live` mask invariant the stage guarantees upstream
+    dead = rng.random((s, b)) < 0.3
+    d[dead] = FILTER_K + 1
+    origin[dead] = POS_SENTINEL
+    tile[dead] = POS_SENTINEL
+    d[:, 0] = FILTER_K + 1  # one all-dead column
+    origin[:, 0] = POS_SENTINEL
+    tile[:, 0] = POS_SENTINEL
+    return graph_mapper.CandidateStageResult(
+        distance=d, origin=origin, tile=tile,
+        gwin=rng.integers(0, 2 ** 16, size=(s, b, T_CAP)).astype(np.uint32),
+        bwin=rng.integers(-1, 3000, size=(s, b, T_CAP)).astype(np.int32),
+        t_len=rng.integers(1, T_CAP + 1, size=(s, b)).astype(np.int32),
+        prefilter_ok=rng.integers(0, 2, size=(s, b)).astype(bool))
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 4])
+def test_graph_device_merge_matches_host(num_shards):
+    rng = np.random.default_rng(50 + num_shards)
+    for trial in range(4):
+        stage = _rand_graph_stage(num_shards, 24, rng)
+        host = ShardedGraphMapExecutor.merge_host(stage)
+        with sm.x64_scope():
+            out = jax.jit(sm.merge_graph)(
+                *[jnp.asarray(x) for x in stage])
+        dev = graph_mapper.CandidateStageResult(*out[:7])
+        for f in graph_mapper.CandidateStageResult._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(host, f)), np.asarray(getattr(dev, f)),
+                err_msg=f"field {f}")
+
+
+# ------------------------------------------ differential: real workloads ----
+L = 6_000
+P_CAP = 128
+CFG = GenASMConfig()
+KW = dict(p_cap=P_CAP, filter_bits=128, filter_k=12)
+
+
+def _cigars(res):
+    return [io.cigar_string(np.asarray(res.ops)[i], int(res.n_ops[i]))
+            for i in range(len(res.n_ops))]
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 4])
+def test_linear_workload_device_merge_end_to_end(num_shards):
+    """Winners, positions, and CIGARs through the device merge equal the
+    single-device mapper at every shard count."""
+    ref = simulate.random_reference(L, seed=31)
+    epi = minimizer_index.build_epoched_index(ref, w=8, k=12)
+    esi = shard.from_epoched(epi, num_shards)
+    rs = simulate.simulate_reads(ref, n_reads=8, read_len=100,
+                                 seed=32 + num_shards)
+    arr, lens = encode.batch_reads(rs.reads, P_CAP)
+
+    single = core_mapper.map_batch(
+        epi.index, jnp.asarray(arr), jnp.asarray(lens), cfg=CFG,
+        max_candidates=4, backend="lax", minimizer_w=8, minimizer_k=12,
+        **KW)
+    sharded = shard.map_batch_sharded(
+        esi.index, arr, lens, cfg=CFG, shard_candidates=4, backend="lax",
+        **KW)
+    assert (np.asarray(single.position) == sharded.position).all()
+    assert (np.asarray(single.distance) == sharded.distance).all()
+    assert _cigars(single) == _cigars(sharded)
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 4])
+def test_graph_workload_device_merge_end_to_end(num_shards):
+    ref = simulate.random_reference(L, seed=33)
+    variants = simulate.simulate_variants(ref, n_snp=20, n_ins=10,
+                                          n_del=10, seed=34)
+    gidx = graph_index.build_graph_index(ref, variants, w=8, k=12,
+                                         window=P_CAP + 2 * CFG.w)
+    esi = shard.from_epoched_graph(gidx, num_shards)
+    rs = simulate.simulate_reads(ref, n_reads=8, read_len=100,
+                                 seed=35 + num_shards)
+    arr, lens = encode.batch_reads(rs.reads, P_CAP)
+
+    single = graph_mapper.map_batch_index(
+        gidx, jnp.asarray(arr), jnp.asarray(lens), cfg=CFG,
+        max_candidates=4, backend="graph_lax", minimizer_w=8,
+        minimizer_k=12, **KW)
+    sharded = shard.map_batch_sharded_graph(
+        esi.index, arr, lens, cfg=CFG, shard_candidates=4,
+        backend="graph_lax", **KW)
+    assert (np.asarray(single.position) == sharded.position).all()
+    assert (np.asarray(single.distance) == sharded.distance).all()
+    assert _cigars(single) == _cigars(sharded)
+    assert (np.asarray(single.path) == sharded.path).all()

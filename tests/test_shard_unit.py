@@ -5,7 +5,7 @@ import pytest
 from repro import shard
 from repro.core import minimizer_index
 from repro.core.genasm import GenASMConfig
-from repro.genomics import encode, simulate
+from repro.genomics import encode, io, simulate
 from repro.serve import EngineConfig, ResultCache, ServeEngine
 
 W, K = 8, 12
@@ -152,6 +152,128 @@ def test_failover_gives_up_after_max_attempts(ref, epi, reads):
     with pytest.raises(RuntimeError, match="failed 2 times"):
         shard.map_batch_with_failover(esi, arr, lens, max_attempts=2,
                                       fault_hook=always_lose, **MAP_KW)
+
+
+def _paf_rows(res, lens, ref_len):
+    rows = []
+    for i in range(len(lens)):
+        L = int(lens[i])
+        rows.append({
+            "qname": f"read{i}", "qlen": L, "qstart": 0, "qend": L,
+            "strand": "+", "tname": "ref", "tlen": ref_len,
+            "tstart": int(res.position[i]),
+            "tend": int(res.position[i]) + L,
+            "nmatch": L - int(res.distance[i]), "alnlen": L, "mapq": 60,
+            "cigar": io.cigar_string(np.asarray(res.ops)[i],
+                                     int(res.n_ops[i])),
+        })
+    return rows
+
+
+def test_failover_align_chunk_requeues_in_pipelined_mode(ref, epi, reads,
+                                                         tmp_path):
+    """A shard lost *between merge and align* (the window the pipelined
+    path opens) re-queues its align chunk; the re-assembled PAF bytes
+    are identical to a clean full-batch run."""
+    arr, lens = encode.batch_reads(list(reads.reads), 128)
+    esi = shard.from_epoched(epi, 3)
+    clean = shard.map_batch_with_failover(esi, arr, lens, **MAP_KW)
+
+    failures = []
+
+    def lose_between_merge_and_align(i, attempt):
+        if i == 1 and attempt == 1:
+            failures.append(i)
+            raise RuntimeError("simulated device loss mid-pipeline")
+
+    esi2 = shard.from_epoched(epi, 3)
+    res = shard.map_batch_with_failover(
+        esi2, arr, lens, pipelined=True,
+        align_fault_hook=lose_between_merge_and_align, **MAP_KW)
+    assert failures == [1]  # the fault fired after the device merge
+    assert esi2.epochs == [0, 1, 0]  # lost shard re-materialized
+    p_clean, p_fault = tmp_path / "clean.paf", tmp_path / "fault.paf"
+    io.write_paf(p_clean, _paf_rows(clean, lens, len(ref)))
+    io.write_paf(p_fault, _paf_rows(res, lens, len(ref)))
+    assert p_clean.read_bytes() == p_fault.read_bytes()
+    # and the failover driver's output equals the one-program device
+    # merge path (same packed-key reduction, different launch structure)
+    direct = shard.map_batch_sharded(esi.index, arr, lens, **MAP_KW)
+    for f_c, f_d in zip(clean, direct):
+        assert (np.asarray(f_c) == np.asarray(f_d)).all()
+
+
+def test_failover_graph_faults_yield_identical_gaf(ref, reads, tmp_path):
+    """Graph failover: a screen-phase loss AND an align-chunk loss in the
+    same batch still yield byte-identical GAF output."""
+    from repro.graph import index as graph_index
+
+    variants = simulate.simulate_variants(ref, n_snp=20, n_ins=10,
+                                          n_del=10, seed=7)
+    gidx = graph_index.build_graph_index(ref, variants, w=W, k=K,
+                                         window=128 + 2 * CFG.w)
+    arr, lens = encode.batch_reads(list(reads.reads), 128)
+    kw = dict(cfg=CFG, p_cap=128, filter_bits=128, filter_k=12,
+              shard_candidates=4, backend="graph_lax")
+
+    esi = shard.from_epoched_graph(gidx, 3)
+    clean = shard.map_batch_with_failover_graph(esi, arr, lens, **kw)
+
+    failures = []
+
+    def lose_screen(i, attempt):
+        if i == 0 and attempt == 1:
+            failures.append(("screen", i))
+            raise RuntimeError("simulated loss in screen")
+
+    def lose_align_chunk(i, attempt):
+        if i == 1 and attempt == 1:
+            failures.append(("align", i))
+            raise RuntimeError("simulated loss between merge and align")
+
+    esi2 = shard.from_epoched_graph(gidx, 3)
+    res = shard.map_batch_with_failover_graph(
+        esi2, arr, lens, pipelined=True, fault_hook=lose_screen,
+        align_fault_hook=lose_align_chunk, **kw)
+    assert failures == [("screen", 0), ("align", 1)]
+    assert esi2.epochs == [1, 1, 0]
+
+    def gaf_rows(r):
+        rows = []
+        for i in range(len(lens)):
+            L = int(lens[i])
+            pstr, plen = io.gaf_path(np.asarray(r.path)[i])
+            rows.append({
+                "qname": f"read{i}", "qlen": L, "qstart": 0, "qend": L,
+                "strand": "+", "path": pstr, "plen": plen, "pstart": 0,
+                "pend": plen, "nmatch": L - int(r.distance[i]),
+                "alnlen": int(r.n_ops[i]), "mapq": 60,
+                "cigar": io.cigar_string(np.asarray(r.ops)[i],
+                                         int(r.n_ops[i])),
+            })
+        return rows
+
+    p_clean, p_fault = tmp_path / "clean.gaf", tmp_path / "fault.gaf"
+    io.write_gaf(p_clean, gaf_rows(clean))
+    io.write_gaf(p_fault, gaf_rows(res))
+    assert p_clean.read_bytes() == p_fault.read_bytes()
+
+
+def test_engine_pipelined_sharded_matches_single(epi, reads):
+    """Device merge + mesh-split align + double-buffered flushes change
+    dispatch structure only — results stay bit-identical."""
+    base = dict(buckets=(128,), max_batch=4, filter_k=12,
+                minimizer_w=W, minimizer_k=K, align_backend="lax")
+    with ServeEngine(epi, EngineConfig(**base)) as eng1:
+        r1 = eng1.map_all(list(reads.reads))
+    with ServeEngine(epi, EngineConfig(num_shards=2, align_sharded=True,
+                                       pipelined=True, **base)) as eng2:
+        r2 = eng2.map_all(list(reads.reads))  # >=4 flushes: pending overlaps
+        assert eng2.metrics.counter("batches_flushed").value >= 4
+    for a, b in zip(r1, r2):
+        assert (a.position, a.distance, a.n_ops) == \
+            (b.position, b.distance, b.n_ops)
+        assert (a.ops == b.ops).all()
 
 
 def test_engine_sharded_matches_single(epi, reads):
